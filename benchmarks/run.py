@@ -1,0 +1,223 @@
+"""Benchmark harness — one benchmark per paper claim/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  logits_native / logits_artifact   Fig. 3: same graph under the in-framework
+                                    runtime vs the exported FAIR artifact
+                                    (the paper's ONNX portability claim)
+  trajectory_sdk_host               Fig. 2 App loop: host-side NumPy SDK
+                                    generation (paper-faithful client path)
+  trajectory_batched_graph          beyond-paper: in-graph batched sampler
+                                    (lax.fori_loop + KV cache), events/s
+  tte_fused_kernel / tte_ref        eq. 1 sampler: fused Pallas kernel
+                                    (interpret-mode CPU proxy) vs jnp oracle
+  train_step_delphi                 dual-loss training throughput, tokens/s
+  serving_engine_batched            slot continuous batching end-to-end
+  roofline_*                        derived = dominant roofline term (reads
+                                    experiments/dryrun; skipped when absent)
+
+CPU numbers are proxies for relative comparisons, not TPU projections — the
+TPU story lives in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_runtime_portability():
+    from repro.configs import get_config
+    from repro.core import get_logits, init_delphi
+    from repro.sdk import Runtime, export_model
+
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_seq_len=64)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((1, 64), jnp.int32)
+    ages = jnp.zeros((1, 64), jnp.float32)
+
+    native = jax.jit(lambda p, t, a: get_logits(p, cfg, t, a))
+    us_native = _time(native, params, tokens, ages)
+    _row("logits_native", us_native, f"{1e6 / us_native:.1f} calls/s")
+
+    d = tempfile.mkdtemp()
+    export_model(params, cfg, d)
+    rt = Runtime(d)
+    t_np, a_np = np.asarray(tokens), np.asarray(ages)
+    us_art = _time(lambda: rt.run(t_np, a_np), n=10)
+    _row("logits_artifact", us_art,
+         f"overhead {us_art / us_native:.2f}x vs native")
+
+
+def bench_trajectory_generation():
+    from repro.configs import get_config
+    from repro.core import generate_trajectories_jit, init_delphi
+    from repro.sdk import InferenceSession, export_model
+
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_seq_len=96)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    d = tempfile.mkdtemp()
+    export_model(params, cfg, d)
+    sess = InferenceSession(d)
+
+    toks, ags = [3, 500, 700], [0.0, 30.0, 40.0]
+    n_events = 16
+
+    def sdk_loop():
+        return sess.generate_trajectory(toks, ags, max_new=n_events,
+                                        max_age=1e9)
+    t0 = time.perf_counter()
+    out = sdk_loop()
+    us = (time.perf_counter() - t0) * 1e6
+    ev = max(len(out["tokens"]), 1)
+    _row("trajectory_sdk_host", us / ev, f"{ev * 1e6 / us:.1f} events/s")
+
+    B = 16
+    tokens = jnp.tile(jnp.asarray(toks, jnp.int32)[None], (B, 1))
+    ages = jnp.tile(jnp.asarray(ags, jnp.float32)[None], (B, 1))
+    fn = lambda: generate_trajectories_jit(  # noqa: E731
+        params, cfg, tokens, ages, jax.random.PRNGKey(1), max_new=n_events)
+    us_g = _time(fn, n=3, warmup=1)
+    ev_g = B * n_events
+    _row("trajectory_batched_graph", us_g / ev_g,
+         f"{ev_g * 1e6 / us_g:.1f} events/s (beyond-paper batched path)")
+
+
+def bench_tte_kernel():
+    from repro.kernels import tte_sample
+    from repro.kernels.ref import tte_sample_ref
+
+    for V in (1289, 256206):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (8, V))
+        u = jax.random.uniform(jax.random.PRNGKey(1), (8, V))
+        us_ref = _time(jax.jit(tte_sample_ref), logits, u)
+        _row(f"tte_ref_V{V}", us_ref, f"{8e6 / us_ref:.0f} samples/s")
+        us_k = _time(lambda l, uu: tte_sample(l, uu), logits, u, n=3,
+                     warmup=1)
+        _row(f"tte_fused_kernel_V{V}", us_k,
+             "interpret-mode proxy; HBM-fusion win is a TPU property")
+
+
+def bench_train_step():
+    from repro.configs import get_config
+    from repro.core import init_delphi
+    from repro.data import SimulatorConfig, generate_dataset, pack_trajectories
+    from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_seq_len=96)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    train, _ = generate_dataset(SimulatorConfig(n_train=64, n_val=1))
+    packed = pack_trajectories(train, 96)
+    batch = {k: jnp.asarray(v[:32]) for k, v in packed.items()}
+    step = jax.jit(make_train_step(cfg, OptimizerConfig(), "delphi"))
+    opt = init_opt_state(params)
+
+    def run(p, o, b):
+        p2, o2, m = step(p, o, b)
+        return m["loss"]
+    us = _time(run, params, opt, batch, n=5, warmup=1)
+    toks = 32 * 96
+    _row("train_step_delphi", us, f"{toks * 1e6 / us:.0f} tokens/s")
+
+
+def bench_serving_engine():
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import BatchedEngine, Request
+
+    cfg = get_config("delphi-2m").replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = BatchedEngine(params, cfg, slots=8, max_context=128)
+    for i in range(16):
+        eng.submit(Request(tokens=np.arange(3, 9, dtype=np.int32),
+                           ages=np.linspace(0, 30, 6).astype(np.float32),
+                           max_new=12))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    ev = sum(len(r.out_tokens) for r in done)
+    _row("serving_engine_batched", dt * 1e6 / max(ev, 1),
+         f"{ev / dt:.1f} events/s across {len(done)} requests")
+
+
+def bench_calibration():
+    """Delphi-style evaluation: generated cohort vs held-out cohort stats."""
+    from repro.configs import get_config
+    from repro.core import calibration_report, init_delphi
+    from repro.data import (SimulatorConfig, batches, generate_dataset,
+                            pack_trajectories)
+    from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_seq_len=96)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    train, val = generate_dataset(SimulatorConfig(n_train=256, n_val=64))
+    it = batches(pack_trajectories(train, 96), 32, seed=0)
+    step = jax.jit(make_train_step(
+        cfg, OptimizerConfig(lr=1e-3, total_steps=50), "delphi"))
+    opt = init_opt_state(params)
+    for _ in range(50):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, _ = step(params, opt, b)
+    t0 = time.perf_counter()
+    rep = calibration_report(params, cfg, val, n_batches=1)
+    us = (time.perf_counter() - t0) * 1e6
+    _row("calibration_chapter_l1", us,
+         f"L1={rep['chapter_l1']:.3f} data_rate={rep['data']['events_per_year']:.2f}/y "
+         f"model_rate={rep['model']['events_per_year']:.2f}/y (50-step model)")
+
+
+def bench_roofline():
+    from repro.launch.roofline import analyse, load_records
+    for dirpath in ("experiments/dryrun", "experiments/dryrun_multipod"):
+        if not os.path.isdir(dirpath):
+            continue
+        for rec in load_records(dirpath):
+            a = analyse(rec)
+            dom_s = a[f"{a['dominant']}_s"]
+            _row(f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}",
+                 dom_s * 1e6,
+                 f"dominant={a['dominant']} useful={a['useful_ratio']:.3f}"
+                 if a["useful_ratio"] else f"dominant={a['dominant']}")
+
+
+BENCHES = {
+    "portability": bench_runtime_portability,
+    "trajectory": bench_trajectory_generation,
+    "tte": bench_tte_kernel,
+    "train": bench_train_step,
+    "serve": bench_serving_engine,
+    "calibration": bench_calibration,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in which:
+        BENCHES[name]()
+
+
+if __name__ == "__main__":
+    main()

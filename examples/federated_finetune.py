@@ -1,0 +1,69 @@
+"""Client-side federated fine-tuning — the paper's §Discussion future work.
+
+Scenario: a model pretrained on the released synthetic cohort is fine-tuned
+on K hospitals' *private* patients (here: a cohort simulated with shifted
+hazards — a domain shift).  Patient data never leaves its client; only
+clipped parameter deltas are averaged.
+
+Run:  PYTHONPATH=src python examples/federated_finetune.py [--clients 6]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.core.delphi import loss_fn
+from repro.data import (SimulatorConfig, batches, generate_dataset,
+                        pack_trajectories)
+from repro.federated import FedConfig, federated_finetune
+from repro.train import OptimizerConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--pretrain-steps", type=int, default=60)
+    ap.add_argument("--rounds", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_seq_len=96)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+
+    print("== pretrain on the public synthetic cohort ==")
+    public, _ = generate_dataset(SimulatorConfig(n_train=512, n_val=8))
+    it = batches(pack_trajectories(public, 96), 32, seed=0)
+    params, _ = train_loop(
+        params, cfg, OptimizerConfig(lr=6e-4, total_steps=args.pretrain_steps),
+        it, objective="delphi", steps=args.pretrain_steps, log_every=20)
+
+    print("== private cohort (shifted hazards = domain shift) ==")
+    shifted = SimulatorConfig(n_train=64 * args.clients, n_val=128, seed=123,
+                              mean_age_slope=0.5, death_age_slope=1.1,
+                              mean_log_hazard=-10.0)
+    private, private_val = generate_dataset(shifted)
+    pv = pack_trajectories(private_val, 96)
+    vb = {k: jnp.asarray(v[:64]) for k, v in pv.items()}
+
+    @jax.jit
+    def val_loss(p):
+        return loss_fn(p, cfg, vb)["loss"]
+
+    print(f"   pretrain model on private-domain val: {val_loss(params):.4f}")
+
+    shards = [private[i::args.clients] for i in range(args.clients)]
+    iters = [batches(pack_trajectories(s, 96), 16, seed=i)
+             for i, s in enumerate(shards)]
+    fed = FedConfig(n_rounds=args.rounds, local_steps=5, local_lr=5e-4,
+                    clip_delta_norm=10.0)
+    print(f"== federated fine-tune: {args.clients} clients x "
+          f"{len(shards[0])} patients, deltas clipped, data stays local ==")
+    params, hist = federated_finetune(params, cfg, iters, fed,
+                                      eval_fn=val_loss)
+    print(f"   private-domain val: {hist['val'][0]:.4f} -> "
+          f"{min(hist['val']):.4f} (no patient record ever centralized)")
+
+
+if __name__ == "__main__":
+    main()

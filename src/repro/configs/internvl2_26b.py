@@ -1,0 +1,24 @@
+"""InternVL2-26B — InternLM2-20B language backbone + InternViT frontend stub.
+[arXiv:2404.16821]
+
+Per the mandate the ViT + projector are a stub: ``input_specs`` supplies 256
+precomputed patch embeddings of shape (batch, 256, d_model) which the decoder
+consumes prepended to the text sequence.
+"""
+from repro.configs.base import VLM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    arch_type=VLM,
+    citation="arXiv:2404.16821",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    max_seq_len=32_768,
+    frontend="vision_patches",
+    n_frontend_tokens=256,
+)

@@ -1,0 +1,28 @@
+"""SeamlessM4T-large-v2 — encoder-decoder multimodal (speech) backbone.
+[arXiv:2308.11596]
+
+Per the mandate the mel-spectrogram + conv codec is a stub: ``input_specs``
+supplies precomputed frame embeddings (batch, seq//8, d_model) to the 24-layer
+encoder; the 24-layer causal decoder (with cross-attention) is fully
+implemented and is what decode shapes lower.
+"""
+from repro.configs.base import AUDIO, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type=AUDIO,
+    citation="arXiv:2308.11596",
+    n_layers=24,           # decoder layers
+    n_encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    norm="layernorm",
+    activation="gelu",
+    max_seq_len=32_768,
+    frontend="audio_frames",
+    enc_len_ratio=8,
+    dec_enc_len=4096,
+)

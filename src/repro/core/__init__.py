@@ -1,0 +1,20 @@
+"""The paper's contribution: Delphi-2M + dual loss + time-to-event sampling,
+plus the risk-estimation and calibration layers the App exposes."""
+from repro.core.calibration import calibration_report, cohort_stats
+from repro.core.delphi import get_logits, init_delphi, loss_fn
+from repro.core.losses import dual_loss, event_ce, joint_nll, time_nll
+from repro.core.risk import (analytic_next_event_risk, disease_chapter_map,
+                             monte_carlo_risk, next_event_risk)
+from repro.core.sampler import (generate_trajectories,
+                                generate_trajectories_jit,
+                                sample_next_event, sample_waiting_times)
+
+__all__ = [
+    "calibration_report", "cohort_stats",
+    "get_logits", "init_delphi", "loss_fn",
+    "dual_loss", "event_ce", "joint_nll", "time_nll",
+    "analytic_next_event_risk", "disease_chapter_map", "monte_carlo_risk",
+    "next_event_risk",
+    "generate_trajectories", "generate_trajectories_jit",
+    "sample_next_event", "sample_waiting_times",
+]

@@ -1,0 +1,44 @@
+"""Delphi-2M model facade — the paper's GPT with age encoding + dual head.
+
+The backbone reuses the architecture zoo (``repro.models``); what makes it
+Delphi is (a) ``age_encoding=True`` in the config (continuous sinusoidal age
+features replace positional encodings), (b) the dual loss (``core.losses``)
+over the single logit head, (c) the competing-exponential sampler
+(``core.sampler``).  This module provides the task-level API used by the
+trainer, the SDK exporter, and the examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import losses
+from repro.models import forward, init_params
+
+
+def init_delphi(cfg: ModelConfig, key):
+    assert cfg.age_encoding and cfg.dual_head, "not a Delphi config"
+    return init_params(cfg, key)
+
+
+def get_logits(params, cfg: ModelConfig, tokens, ages):
+    """The SDK-parity entry point: (B, S) tokens + ages -> (B, S, V) fp32
+    logits.  This exact function is what ``sdk.export`` serializes (claim C2)."""
+    return forward(params, cfg, {"tokens": tokens, "ages": ages},
+                   mode="train")["logits"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            time_weight: float = 1.0) -> Dict[str, jax.Array]:
+    """Delphi training objective on a packed batch.
+
+    batch: tokens (B, S), ages (B, S), targets (B, S), target_dt (B, S),
+    loss_mask (B, S).
+    """
+    logits = get_logits(params, cfg, batch["tokens"], batch["ages"])
+    out = losses.dual_loss(logits, batch["targets"], batch["target_dt"],
+                           batch["loss_mask"], time_weight=time_weight)
+    return out

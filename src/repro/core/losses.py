@@ -1,0 +1,61 @@
+"""Delphi-2M dual loss: next-event cross-entropy + exponential time-to-event NLL.
+
+The model emits one logit per vocabulary entry; rates are lambda_i =
+exp(logit_i).  Under competing exponential clocks the joint NLL of observing
+event j after waiting time dt factorizes exactly:
+
+    NLL(j, dt) = Lambda*dt - logit_j
+               = [logsumexp(logits) - logit_j]  +  [Lambda*dt - log(Lambda)]
+               =        CE(event)               +     Exp-NLL(time)
+
+with Lambda = sum_i exp(logit_i).  We expose both the factored form (what the
+Delphi training script optimizes: ``ce + time_nll``) and the joint form; their
+identity is property-tested (tests/test_losses.py), which validates the
+paper's claim C3 that the eq.-1 sampler and the training loss describe the
+same generative process.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def event_ce(logits, targets):
+    """Per-position cross-entropy. logits (..., V) fp32, targets (...) int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def time_nll(logits, dt):
+    """Exponential waiting-time NLL with total rate Lambda = sum_i e^{logit_i}.
+
+    dt in years.  NLL = Lambda*dt - log(Lambda).
+    """
+    log_rate = jax.nn.logsumexp(logits, axis=-1)          # log Lambda
+    return jnp.exp(log_rate) * dt - log_rate
+
+
+def joint_nll(logits, targets, dt):
+    """Competing-risk joint NLL: Lambda*dt - logit_j (== event_ce + time_nll)."""
+    rate = jnp.exp(jax.nn.logsumexp(logits, axis=-1))
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return rate * dt - tgt
+
+
+def dual_loss(logits, targets, dt, mask, *, time_weight: float = 1.0
+              ) -> Dict[str, jax.Array]:
+    """Masked mean of the Delphi dual objective.
+
+    logits: (B, S, V) fp32; targets: (B, S) next-event ids; dt: (B, S) years
+    until the next event; mask: (B, S) {0,1} — positions whose *target* is a
+    real event (padding / no-event targets are excluded, as in the reference
+    train.py).
+    """
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(event_ce(logits, targets) * mask) / denom
+    tn = jnp.sum(time_nll(logits, dt) * mask) / denom
+    return {"loss": ce + time_weight * tn, "event_ce": ce, "time_nll": tn}

@@ -1,0 +1,91 @@
+"""Morbidity-risk estimation — the App's headline output.
+
+The paper's SDK "performs Postprocessing, converting these results back into
+human-readable morbidity risk estimates (events and ages in years)".  Two
+estimators over the same model:
+
+* ``analytic_next_event_risk`` — closed form from one forward pass: under the
+  competing-exponential model the probability that code i is the next event
+  within horizon h is
+
+      P(i, t <= h) = (lambda_i / Lambda) * (1 - exp(-Lambda * h))
+
+* ``monte_carlo_risk`` — unrolls the eq.-1 sampler N times and counts
+  trajectories in which the code (or its ICD chapter) occurs within the
+  horizon: the multi-event risk the App's right panel visualizes.
+
+Both are exported through ``sdk.session.InferenceSession.estimate_risk`` so
+the client-side path matches the paper's architecture.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sampler import generate_trajectories
+from repro.models import forward
+
+
+def analytic_next_event_risk(logits, horizon: float):
+    """logits: (..., V) -> P(next event = i and it happens within horizon).
+
+    Returns (..., V) probabilities summing to (1 - e^{-Lambda h}) <= 1.
+    """
+    log_l = logits.astype(jnp.float32)
+    log_rate = jax.nn.logsumexp(log_l, axis=-1, keepdims=True)   # log Lambda
+    frac = jax.nn.softmax(log_l, axis=-1)                        # lambda_i/Lambda
+    p_any = 1.0 - jnp.exp(-jnp.exp(log_rate) * horizon)
+    return frac * p_any
+
+
+def next_event_risk(params, cfg: ModelConfig, tokens, ages, *,
+                    horizon: float = 5.0):
+    """One forward pass -> (B, V) within-horizon next-event risks."""
+    out = forward(params, cfg, {"tokens": tokens, "ages": ages}, mode="train")
+    return analytic_next_event_risk(out["logits"][:, -1], horizon)
+
+
+def monte_carlo_risk(params, cfg: ModelConfig, tokens, ages, rng, *,
+                     horizon: float = 5.0, n_samples: int = 64,
+                     max_new: int = 48,
+                     chapter_of: Optional[jax.Array] = None
+                     ) -> Dict[str, jax.Array]:
+    """Sampled multi-event risk for ONE patient.
+
+    tokens/ages: (S,) history.  Returns dict with
+      ``code_risk`` (V,)      P(code occurs within horizon)
+      ``chapter_risk`` (C,)   P(any code of chapter occurs within horizon)
+                              (when ``chapter_of`` (V,) int32 is given)
+      ``death_risk`` ()       P(Death within horizon)
+    """
+    S = tokens.shape[0]
+    t = jnp.broadcast_to(tokens[None], (n_samples, S))
+    a = jnp.broadcast_to(ages[None], (n_samples, S))
+    out = generate_trajectories(params, cfg, t, a, rng, max_new=max_new)
+    gen_tok = out["tokens"][:, S:]                    # (N, max_new)
+    gen_age = out["ages"][:, S:]
+    within = out["alive_mask"] & (gen_age <= ages[-1] + horizon)
+    onehot = jax.nn.one_hot(gen_tok, cfg.vocab_size, dtype=jnp.float32)
+    occurred = jnp.max(onehot * within[..., None], axis=1)       # (N, V)
+    code_risk = jnp.mean(occurred, axis=0)
+    res = {"code_risk": code_risk,
+           "death_risk": code_risk[cfg.death_token]}
+    if chapter_of is not None:
+        C = int(jnp.max(chapter_of)) + 1
+        chap_onehot = jax.nn.one_hot(chapter_of, C, dtype=jnp.float32)
+        chap_occ = jnp.clip(occurred @ chap_onehot, 0.0, 1.0)
+        res["chapter_risk"] = jnp.mean(chap_occ, axis=0)
+    return res
+
+
+def disease_chapter_map(vocab_size: int):
+    """(V,) chapter index per token (specials/lifestyle -> chapter 0-pad)."""
+    from repro.data import vocab as V
+    import numpy as np
+    out = np.zeros(vocab_size, np.int32)
+    for c in range(V.DISEASE0, min(vocab_size, V.VOCAB_SIZE)):
+        out[c] = V.chapter_of(c) + 1     # 0 reserved for non-disease
+    return jnp.asarray(out)

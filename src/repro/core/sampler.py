@@ -1,0 +1,117 @@
+"""Competing-exponential time-to-event trajectory generation (paper eq. 1).
+
+For each vocabulary entry the sampler draws a candidate waiting time
+
+    t_i = -exp(-logit_i) * ln(u_i),    u_i ~ U(0,1)
+
+and takes the argmin — the next event — advancing patient age by t_min.
+Generation stops at the Death token or when age exceeds ``max_age`` (85 years
+by default, both overridable — exactly the knobs the paper's JS SDK exposes).
+
+Two equivalent consumers exist:
+* this module — in-graph batched generation (``lax.fori_loop`` over decode
+  steps against the KV cache) used by the serving engine and benchmarks;
+* ``repro.sdk.session`` — host-side NumPy generation against the exported
+  artifact, mirroring the paper's client-side JS SDK.
+Determinism contract: both accept pre-drawn uniforms, so SDK-vs-core parity is
+bit-exact and testable (claim C2/C3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward
+
+
+def sample_waiting_times(logits, u):
+    """t_i = -exp(-logit_i) * ln(u_i).  logits, u: (..., V) fp32."""
+    u = jnp.clip(u, 1e-12, 1.0 - 1e-12)
+    return -jnp.exp(-logits) * jnp.log(u)
+
+
+def sample_next_event(logits, u):
+    """Returns (event id (...,), waiting time t_min (...,))."""
+    t = sample_waiting_times(logits, u)
+    idx = jnp.argmin(t, axis=-1)
+    tmin = jnp.take_along_axis(t, idx[..., None], axis=-1)[..., 0]
+    return idx.astype(jnp.int32), tmin
+
+
+def generate_trajectories(params, cfg: ModelConfig, tokens, ages, rng, *,
+                          max_new: int = 64, max_age: Optional[float] = None,
+                          death_token: Optional[int] = None,
+                          uniforms: Optional[jax.Array] = None,
+                          cache_width: Optional[int] = None
+                          ) -> Dict[str, jax.Array]:
+    """Batched trajectory generation.
+
+    tokens/ages: (B, S) prompt (the patient's known history).  Returns dict
+    with ``tokens``/``ages`` (B, S+max_new) (padded with 0 / last age after
+    termination), ``n_generated`` (B,), ``alive_mask`` (B, max_new).
+
+    uniforms: optional (B, max_new, V) pre-drawn U(0,1) — injected for
+    SDK-parity tests; otherwise drawn from ``rng`` (threefry) in-graph.
+    """
+    max_age = cfg.max_age if max_age is None else max_age
+    death = cfg.death_token if death_token is None else death_token
+    B, S = tokens.shape
+    V = cfg.vocab_size
+    W = cache_width or (S + max_new)
+
+    pre = forward(params, cfg, {"tokens": tokens, "ages": ages},
+                  mode="prefill", cache_width=W)
+    cache = pre["cache"]
+    logits0 = pre["logits"][:, -1]                     # (B, V)
+
+    tok_buf = jnp.concatenate(
+        [tokens, jnp.zeros((B, max_new), tokens.dtype)], axis=1)
+    age_buf = jnp.concatenate(
+        [ages, jnp.broadcast_to(ages[:, -1:], (B, max_new)).astype(ages.dtype)],
+        axis=1)
+    alive0 = jnp.ones((B,), bool)
+    alive_hist0 = jnp.zeros((B, max_new), bool)
+
+    def body(i, state):
+        cache, logits, tok_buf, age_buf, alive, alive_hist, rng, n_gen = state
+        rng, kr = jax.random.split(rng)
+        if uniforms is not None:
+            u = uniforms[:, i]
+        else:
+            u = jax.random.uniform(kr, (B, V))
+        evt, tmin = sample_next_event(logits, u)
+        new_age = age_buf[:, S + i - 1] + tmin
+        # termination BEFORE emitting: an event past max_age is censored
+        over_age = new_age > max_age
+        emit = alive & ~over_age
+        evt = jnp.where(emit, evt, 0)
+        new_age = jnp.where(emit, new_age, age_buf[:, S + i - 1])
+        tok_buf = tok_buf.at[:, S + i].set(jnp.where(emit, evt, tok_buf[:, S + i]))
+        age_buf = age_buf.at[:, S + i].set(new_age)
+        alive_hist = alive_hist.at[:, i].set(emit)
+        n_gen = n_gen + emit.astype(jnp.int32)
+        alive = emit & (evt != death)
+        d = decode_step(params, cfg,
+                        cache, {"tokens": evt[:, None], "ages": new_age[:, None]},
+                        jnp.int32(S) + i)
+        return (d["cache"], d["logits"][:, 0], tok_buf, age_buf, alive,
+                alive_hist, rng, n_gen)
+
+    state = (cache, logits0, tok_buf, age_buf, alive0, alive_hist0, rng,
+             jnp.zeros((B,), jnp.int32))
+    state = jax.lax.fori_loop(0, max_new, body, state)
+    _, _, tok_buf, age_buf, _, alive_hist, _, n_gen = state
+    return {"tokens": tok_buf, "ages": age_buf, "n_generated": n_gen,
+            "alive_mask": alive_hist}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "cache_width"))
+def generate_trajectories_jit(params, cfg: ModelConfig, tokens, ages, rng, *,
+                              max_new: int = 64,
+                              cache_width: Optional[int] = None):
+    return generate_trajectories(params, cfg, tokens, ages, rng,
+                                 max_new=max_new, cache_width=cache_width)

@@ -1,0 +1,7 @@
+"""Data substrate: synthetic disease histories, vocab, batching."""
+from repro.data.pipeline import (batches, dataset_stats, lm_batch,
+                                 pack_trajectories)
+from repro.data.synthetic import SimulatorConfig, generate_dataset
+
+__all__ = ["batches", "dataset_stats", "lm_batch", "pack_trajectories",
+           "SimulatorConfig", "generate_dataset"]

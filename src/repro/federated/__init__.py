@@ -1,0 +1,6 @@
+"""Federated client-side fine-tuning (the paper's stated future work)."""
+from repro.federated.fedavg import (FedConfig, aggregate, federated_finetune,
+                                    make_local_update)
+
+__all__ = ["FedConfig", "aggregate", "federated_finetune",
+           "make_local_update"]

@@ -1,0 +1,151 @@
+"""Client-side fine-tuning via federated averaging — the paper's future work.
+
+Paper §Discussion: "to address the challenge of future model updates without
+compromising the client-side privacy-preserving guarantee, we will explore
+integrating client-side fine-tuning ... or more broadly via decentralized
+federated learning, allowing the model to learn and improve while sensitive
+data remains exclusively on the user's device."
+
+This module implements that loop, JAX-native and mesh-aware in principle but
+runnable on one host for the simulation:
+
+  server params --broadcast--> K clients
+  each client: E local AdamW steps on ITS OWN trajectories   (data never moves)
+  each client: uploads only a parameter DELTA (optionally clipped + noised —
+               the standard DP-SGD-at-the-update knob)
+  server: sample-weighted average of deltas (FedAvg)
+
+The client-side step reuses the exact training objective of the centralized
+path (``core.delphi.loss_fn``), so a federated fine-tune is bit-compatible
+with the exported FAIR artifact: clients can load the artifact's params.npz,
+fine-tune locally, and ship deltas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+from repro.train.trainer import make_loss_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_rounds: int = 5
+    local_steps: int = 5
+    local_lr: float = 5e-4
+    clip_delta_norm: Optional[float] = None    # per-client update clipping
+    dp_noise_mult: float = 0.0                 # sigma * clip / n_clients noise
+    server_lr: float = 1.0                     # 1.0 = plain FedAvg
+
+
+def _tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def _tree_add_scaled(a, b, s):
+    return jax.tree_util.tree_map(lambda x, y: x + s * y, a, b)
+
+
+def _tree_norm(t):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(t)))
+
+
+def make_local_update(cfg: ModelConfig, fed: FedConfig,
+                      objective: str = "delphi") -> Callable:
+    """Returns jitted fn(params, batches_stacked) -> (delta, final_loss).
+
+    ``batches_stacked``: pytree of arrays with a leading ``local_steps`` axis
+    (one batch per local step) — the client's on-device data.
+    """
+    loss_fn = make_loss_fn(cfg, objective)
+    ocfg = OptimizerConfig(lr=fed.local_lr, warmup_steps=0,
+                           total_steps=max(fed.local_steps, 1),
+                           min_lr_ratio=1.0)
+
+    def local_update(params, batches_stacked):
+        def step(carry, batch):
+            p, opt = carry
+            def scalar(pp):
+                m = loss_fn(pp, batch)
+                return m["loss"], m
+            grads, m = jax.grad(scalar, has_aux=True)(p)
+            p, opt, _ = adamw_update(grads, opt, p, ocfg)
+            return (p, opt), m["loss"]
+
+        (new_params, _), losses = jax.lax.scan(
+            step, (params, init_opt_state(params)), batches_stacked)
+        delta = _tree_sub(new_params, params)
+        if fed.clip_delta_norm is not None:
+            norm = _tree_norm(delta)
+            scale = jnp.minimum(1.0, fed.clip_delta_norm
+                                / jnp.maximum(norm, 1e-9))
+            delta = jax.tree_util.tree_map(lambda d: d * scale, delta)
+        return delta, losses[-1]
+
+    return jax.jit(local_update)
+
+
+def aggregate(params, deltas: Sequence, weights: Sequence[float],
+              fed: FedConfig, rng=None):
+    """Sample-weighted FedAvg of client deltas (+ optional Gaussian noise)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    avg = jax.tree_util.tree_map(
+        lambda *ds: sum(wi * d.astype(jnp.float32)
+                        for wi, d in zip(w, ds)), *deltas)
+    if fed.dp_noise_mult > 0.0 and fed.clip_delta_norm is not None:
+        assert rng is not None, "DP noise needs an rng"
+        sigma = fed.dp_noise_mult * fed.clip_delta_norm / max(len(deltas), 1)
+        leaves, treedef = jax.tree_util.tree_flatten(avg)
+        keys = jax.random.split(rng, len(leaves))
+        leaves = [l + sigma * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, keys)]
+        avg = jax.tree_util.tree_unflatten(treedef, leaves)
+    return jax.tree_util.tree_map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + fed.server_lr * d).astype(p.dtype), params, avg)
+
+
+def federated_finetune(params, cfg: ModelConfig,
+                       client_iters: List[Iterator[Dict]], fed: FedConfig, *,
+                       objective: str = "delphi", rng=None,
+                       eval_fn: Optional[Callable] = None,
+                       log_fn: Callable[[str], None] = print
+                       ) -> Tuple[object, Dict[str, list]]:
+    """Run ``fed.n_rounds`` of FedAvg over per-client batch iterators.
+
+    Each element of ``client_iters`` yields batches *from that client's own
+    patients only* — the privacy unit of the simulation.
+    """
+    local_update = make_local_update(cfg, fed, objective)
+    hist = {"round": [], "client_loss": [], "val": []}
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    for r in range(fed.n_rounds):
+        deltas, weights, losses = [], [], []
+        for it in client_iters:
+            bs = [next(it) for _ in range(fed.local_steps)]
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *bs)
+            delta, loss = local_update(params, stacked)
+            deltas.append(delta)
+            weights.append(float(bs[0]["tokens"].shape[0] * fed.local_steps))
+            losses.append(float(loss))
+        rng, kr = jax.random.split(rng)
+        params = aggregate(params, deltas, weights, fed, rng=kr)
+        hist["round"].append(r)
+        hist["client_loss"].append(sum(losses) / len(losses))
+        msg = (f"round {r}: mean client loss "
+               f"{hist['client_loss'][-1]:.4f}")
+        if eval_fn is not None:
+            v = float(eval_fn(params))
+            hist["val"].append(v)
+            msg += f" | server val {v:.4f}"
+        log_fn(msg)
+    return params, hist

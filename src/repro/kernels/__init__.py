@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from repro.kernels.ops import flash_attention, ssd_intra, tte_sample
+
+__all__ = ["flash_attention", "ssd_intra", "tte_sample"]

@@ -1,0 +1,116 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+TPU-native adaptation of the attention hot spot: online-softmax over KV
+blocks with fp32 VMEM accumulators.  The grid is (batch, q_heads, q_blocks,
+kv_blocks); the TPU grid is executed sequentially over the innermost
+dimension, so VMEM scratch carries (acc, m, l) across KV blocks of one query
+block.  Causal and sliding-window tiles that are fully masked are skipped
+with ``pl.when`` (no MXU work issued).
+
+Block shapes are (BQ, head_dim) / (BK, head_dim) with BQ = BK = 128 by
+default — MXU-aligned (128 lanes) and small enough that the working set
+(q + k + v + acc tiles, fp32) stays well under a v5e core's ~128 MiB of VMEM
+even at head_dim 256.
+
+GQA is expressed in the index maps: the KV block index map divides the query
+head by ``q_per_kv``, so KV tiles are fetched once per KV head group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  bq: int, bk: int, scale: float, causal: bool,
+                  window: Optional[int]):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # tile-level skip: fully-masked tiles issue no MXU work
+    if causal:
+        run = k_start <= q_start + bq - 1            # some (i >= j)
+        if window is not None:
+            run = jnp.logical_and(
+                run, k_start + bk - 1 > q_start - window)  # some (i - j < w)
+    else:
+        run = ik >= 0                                 # always true (traced)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            rel = qi - kj
+            valid = rel >= 0
+            if window is not None:
+                valid = jnp.logical_and(valid, rel < window)
+            s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_s[...]
+        l_prev = l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, hd); k, v: (B, Hkv, T, hd) -> (B, Hq, S, hd).
+
+    S must be divisible by bq and T by bk (ops.py pads).
+    """
+    B, Hq, S, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    grid = (B, Hq, S // bq, T // bk)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, scale=hd ** -0.5, causal=causal,
+        window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, dtype policy).
+
+``interpret=True`` (the default on this CPU container) runs the kernel bodies
+through the Pallas interpreter — same code path that compiles for TPU, minus
+the Mosaic lowering.  On TPU, call with ``interpret=False`` (or set
+``ModelConfig.use_pallas=True`` so the model layers route here).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_intra as _ssd_intra
+from repro.kernels.tte_sample import tte_sample as _tte
+
+
+def _pad_axis(x, axis: int, mult: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, S, hd); k, v: (B, Hkv, T, hd) -> (B, Hq, S, hd).
+
+    Pads S/T to block multiples; padded KV rows are masked out by the causal
+    predicate (they sit at positions > any query) and padded Q rows are
+    sliced off.
+    """
+    S, T = q.shape[2], k.shape[2]
+    qp = _pad_axis(q, 2, bq)
+    kp = _pad_axis(k, 2, bk)
+    vp = _pad_axis(v, 2, bk)
+    if not causal and kp.shape[2] != T:
+        raise ValueError("non-causal flash requires T % bk == 0 "
+                         "(padding would attend to garbage)")
+    out = _flash(qp, kp, vp, causal=causal, window=window, bq=bq, bk=bk,
+                 interpret=interpret)
+    return out[:, :, :S]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(xdt, Bm, Cm, cum, *, interpret: bool = True
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD: see kernels/ssd_scan.py.  Shapes (BH, C, Q, ·)."""
+    return _ssd_intra(xdt, Bm, Cm, cum, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def tte_sample(logits, u, *, bv: int = 2048, interpret: bool = True
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Fused competing-exponential sampler: (B, V) -> (event, t_min).
+
+    Pads the vocab axis with neutral entries (rate ~ e^-100: never wins).
+    """
+    V = logits.shape[1]
+    b = min(bv, max(256, 1 << (V - 1).bit_length()))
+    lp = _pad_axis(logits.astype(jnp.float32), 1, b, value=-100.0)
+    up = _pad_axis(u.astype(jnp.float32), 1, b, value=0.5)
+    return _tte(lp, up, bv=b, interpret=interpret)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk compute.
+
+The SSD chunked algorithm splits into (a) a quadratic *intra-chunk* term plus
+per-chunk state construction — dense (Q x Q) and (Q x N) matmuls, ideal MXU
+work — and (b) a cheap linear *inter-chunk* recurrence.  This kernel computes
+(a) per (batch*head, chunk) grid cell with everything resident in VMEM:
+
+  y_diag = (C B^T  o  L) (dt*x)         L_ij = exp(cum_i - cum_j), i >= j
+  state  = B^T (exp(cum_Q - cum) * dt*x)
+
+The inter-chunk scan (b) and the off-diagonal contribution stay in plain JAX
+(``repro.models.ssm``) — they are O(S/Q) and bandwidth-trivial.
+
+Chunk Q = 128 keeps every operand MXU-aligned; the tile working set is
+Q*(P + 2N + Q) fp32 ~ 0.3 MiB for (Q=128, P=64, N=128), far under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_intra_kernel(xdt_ref, b_ref, c_ref, cum_ref, y_ref, st_ref, *, q: int):
+    xdt = xdt_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    cum = cum_ref[0, 0].astype(jnp.float32)      # (Q, 1)
+
+    seg = cum - cum.reshape(1, q)                # (Q, Q) cum_i - cum_j
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(qi >= kj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    decay = jnp.exp(cum[q - 1, 0] - cum)         # (Q, 1)
+    st = jax.lax.dot_general(Bm, decay * xdt, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_intra(xdt, Bm, Cm, cum, *, interpret: bool = False
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD.
+
+    xdt: (BH, C, Q, P) dt-scaled inputs; Bm, Cm: (BH, C, Q, N);
+    cum: (BH, C, Q) cumulative dt*A.  Returns
+    (y_diag (BH, C, Q, P) fp32, states (BH, C, N, P) fp32).
+    """
+    BH, C, Q, P = xdt.shape
+    N = Bm.shape[-1]
+    kern = functools.partial(_ssd_intra_kernel, q=Q)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, C, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, C, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, Bm, Cm, cum[..., None])

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the paper's time-to-event sampler (eq. 1), fused.
+
+Computes, per batch row,
+
+    t_i  = -exp(-logit_i) * ln(u_i)
+    event = argmin_i t_i ,   t_min = min_i t_i
+
+without materializing the (B, V) waiting-time tensor in HBM — at Delphi scale
+(V=1,289) this is a convenience; at the zoo's 256,206-token vocabularies the
+fusion saves a full 1 MB/row round trip per generation step, which is the
+entire serving inner loop.
+
+The vocabulary is tiled over the innermost grid dimension; VMEM scratch holds
+the running (min, argmin) pair which is written out on the last tile.
+Uniforms are an explicit input (threefry on device or host-provided), keeping
+the kernel deterministic and runtime-reproducible — the property the paper's
+cross-runtime parity story depends on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.4e38
+
+
+def _tte_kernel(lg_ref, u_ref, evt_ref, tmin_ref, best_t, best_i, *, bv: int):
+    iv = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        best_t[...] = jnp.full_like(best_t, BIG)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    lg = lg_ref[...].astype(jnp.float32)         # (1, bv)
+    u = u_ref[...].astype(jnp.float32)
+    u = jnp.clip(u, 1e-12, 1.0 - 1e-12)
+    t = -jnp.exp(-lg) * jnp.log(u)               # (1, bv)
+    idx = iv * bv + jax.lax.broadcasted_iota(jnp.int32, (1, bv), 1)
+    # local (min, argmin) of this tile, 2-D shapes throughout (TPU-friendly)
+    loc_t = jnp.min(t, axis=1)[0]
+    loc_i = idx[0, jnp.argmin(t, axis=1)[0]]
+    better = loc_t < best_t[0, 0]
+    best_i[0, 0] = jnp.where(better, loc_i, best_i[0, 0])
+    best_t[0, 0] = jnp.where(better, loc_t, best_t[0, 0])
+
+    @pl.when(iv == nv - 1)
+    def _finish():
+        evt_ref[0] = best_i[0, 0]
+        tmin_ref[0] = best_t[0, 0]
+
+
+def tte_sample(logits, u, *, bv: int = 2048, interpret: bool = False
+               ) -> Tuple[jax.Array, jax.Array]:
+    """logits, u: (B, V) -> (event (B,) int32, t_min (B,) fp32).
+
+    V must be divisible by bv (ops.py pads with neutral entries).
+    """
+    B, V = logits.shape
+    kern = functools.partial(_tte_kernel, bv=bv)
+    evt, tmin = pl.pallas_call(
+        kern,
+        grid=(B, V // bv),
+        in_specs=[
+            pl.BlockSpec((1, bv), lambda b, iv: (b, iv)),
+            pl.BlockSpec((1, bv), lambda b, iv: (b, iv)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b, iv: (b,)),
+            pl.BlockSpec((1,), lambda b, iv: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, u)
+    return evt, tmin

@@ -1,0 +1,6 @@
+"""Distribution + launch: mesh, sharding rules, dry-run, roofline, drivers."""
+from repro.launch.mesh import (data_axes, make_host_mesh,
+                               make_production_mesh, model_axis_size)
+
+__all__ = ["data_axes", "make_host_mesh", "make_production_mesh",
+           "model_axis_size"]

@@ -1,0 +1,43 @@
+"""Multi-host bootstrap for real TPU slices.
+
+On actual hardware every host runs the same launcher; this helper wires
+``jax.distributed`` from the standard environment variables and asserts the
+expected pod topology, after which ``make_production_mesh`` sees all 256/512
+devices.  On this CPU container it is a no-op (single process) — the dry-run
+emulates the device count instead.
+
+    from repro.launch.distributed import ensure_distributed
+    ensure_distributed(expect_devices=512)   # 2-pod v5e-256 x 2
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def ensure_distributed(*, expect_devices: Optional[int] = None,
+                       coordinator: Optional[str] = None) -> int:
+    """Initialize jax.distributed when launched multi-process.
+
+    Reads ``JAX_COORDINATOR_ADDRESS`` / ``JAX_NUM_PROCESSES`` /
+    ``JAX_PROCESS_ID`` (or the provided ``coordinator``).  Returns the global
+    device count.  Safe to call repeatedly and on single-host setups.
+    """
+    num_procs = int(os.environ.get("JAX_NUM_PROCESSES", "1"))
+    coord = coordinator or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if num_procs > 1 and coord:
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coord,
+                num_processes=num_procs,
+                process_id=int(os.environ.get("JAX_PROCESS_ID", "0")))
+        except RuntimeError:
+            pass  # already initialized
+    n = len(jax.devices())
+    if expect_devices is not None and n != expect_devices:
+        raise RuntimeError(
+            f"expected {expect_devices} global devices, found {n}; "
+            "check the slice topology / process env")
+    return n

@@ -1,0 +1,175 @@
+"""Divisibility-aware sharding rules for every parameter / activation tree.
+
+Strategy (DESIGN.md §4): batch -> ("pod","data"); heads / FFN hidden / MoE
+experts / Mamba inner channels / vocab -> "model".  ``partition`` drops any
+mesh axis that does not evenly divide its dimension — e.g. 8 KV heads on a
+16-way model axis stay replicated — so every (arch x shape x mesh) lowers
+without per-arch hand tuning; the roofline then *shows* the cost of any
+replication and §Perf attacks it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+Axis = Union[None, str, Sequence[str]]
+
+
+def _axis_size(mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape.get(axis, 0) or 0
+    return int(np.prod([mesh.shape.get(a, 0) or 0 for a in axis]))
+
+
+def partition(mesh, shape: Sequence[int], axes: Sequence[Axis]) -> P:
+    """Build a PartitionSpec keeping only axes that exist and divide."""
+    spec = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        if size > 1 and dim % size == 0:
+            spec.append(tuple(ax) if not isinstance(ax, (str, type(None))) else ax)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def _param_axes(key_path: str, shape) -> list:
+    """Logical axes for a parameter leaf, by trailing name + rank.
+
+    Layer-stacked leaves carry a leading L dim (never sharded).
+    """
+    name = key_path.split("/")[-1]
+    nd = len(shape)
+
+    def pad(trailing):  # left-pad with None for the optional layer-stack dim
+        return [None] * (nd - len(trailing)) + list(trailing)
+
+    if name == "embed":
+        return pad(["model", None])                  # (V, d)
+    if name == "lm_head":
+        return pad([None, "model"])                  # (d, V)
+    if name == "out_bias":
+        return pad(["model"])                        # (V,)
+    if name in ("wq", "wk", "wv"):
+        return pad([None, "model", None])            # (d, H, hd)
+    if name == "wo":
+        return pad(["model", None, None])            # (H, hd, d)
+    if name in ("bq", "bk", "bv"):
+        return pad(["model", None])                  # (H, hd)
+    is_expert = "moe" in key_path.split("/") and "shared" not in key_path
+    if name in ("w_gate", "w_up", "w_fc"):
+        if is_expert:   # expert-stacked (E, d, f): experts first, else f
+            return pad(["model", None, "model_fallback_f"])
+        return pad([None, "model"])
+    if name in ("w_down", "w_proj"):
+        if is_expert:   # (E, f, d)
+            return pad(["model", "model_fallback_f", None])
+        return pad(["model", None])
+    if name in ("b_fc",):
+        return pad(["model"])
+    if name == "router":
+        return pad([None, None])
+    if name == "in_proj":
+        return pad([None, "model"])                  # (d, d_in_proj)
+    if name == "out_proj":
+        return pad(["model", None])                  # (di, d)
+    if name == "conv_w":
+        return pad([None, "model"])                  # (w, ch)
+    if name == "conv_b":
+        return pad(["model"])
+    return [None] * nd                               # norms, scalars, biases
+
+
+def param_pspec(mesh, key_path: str, shape) -> P:
+    axes = _param_axes(key_path, tuple(shape))
+    size = _axis_size(mesh, "model")
+    # resolve the MoE fallback: experts on "model" if divisible, else move
+    # "model" to the per-expert hidden dim
+    primary_ok = all(
+        dim % size == 0 for dim, ax in zip(shape, axes) if ax == "model"
+    ) and size > 1
+    resolved = []
+    for dim, ax in zip(shape, axes):
+        if ax == "model":
+            resolved.append("model" if primary_ok else None)
+        elif ax == "model_fallback_f":
+            use = (not primary_ok) and size > 1 and dim % size == 0
+            resolved.append("model" if use else None)
+        else:
+            resolved.append(ax)
+    return P(*resolved)
+
+
+def _path_str(path) -> str:
+    def part(p):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "name"):       # GetAttrKey (NamedTuple caches)
+            return str(p.name)
+        return str(p.idx)
+    return "/".join(part(p) for p in path)
+
+
+def param_shardings(mesh, params_shape):
+    """NamedSharding pytree for a params (or opt-state moments) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(mesh, _path_str(path), leaf.shape)),
+        params_shape)
+
+
+def opt_state_shardings(mesh, opt_shape, params_sharding):
+    return {"mu": params_sharding, "nu": params_sharding,
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_pspec(mesh, shape: Sequence[int]) -> P:
+    """(B, ...) activations: batch on ("pod","data") when divisible."""
+    da = data_axes(mesh)
+    return partition(mesh, shape, [da] + [None] * (len(shape) - 1))
+
+
+def batch_shardings(mesh, batch_shape):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, batch_pspec(mesh, leaf.shape)),
+        batch_shape)
+
+
+def cache_pspec(mesh, key_path: str, shape) -> P:
+    """Decode-cache leaves are (L, B, ...): batch on data, heads/channels on
+    model where divisible; KV falls back to sharding the window dim when the
+    KV-head count does not divide the model axis (e.g. 8 heads on 16)."""
+    name = key_path.split("/")[-1]
+    da = data_axes(mesh)
+    size = _axis_size(mesh, "model")
+    if name in ("k", "v"):      # (L, B, Hkv, W, hd)
+        if size > 1 and shape[2] % size == 0:
+            return partition(mesh, shape, [None, da, "model", None, None])
+        return partition(mesh, shape, [None, da, None, "model", None])
+    if name == "pos":           # (L, B, W) — follow the K/V window sharding
+        # only shard W if the K/V fell back to window sharding (pos and k
+        # share the W axis layout either way; replication is also fine)
+        return partition(mesh, shape, [None, da, None])
+    if name == "h":             # (L, B, H, N, P)
+        return partition(mesh, shape, [None, da, "model", None, None])
+    if name == "conv":          # (L, B, w, ch)
+        return partition(mesh, shape, [None, da, None, "model"])
+    return partition(mesh, shape, [None, da] + [None] * (len(shape) - 2))
+
+
+def cache_shardings(mesh, cache_shape):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(mesh, _path_str(path), leaf.shape)),
+        cache_shape)

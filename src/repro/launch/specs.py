@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape) step.
+
+``input_specs`` returns (args, in_shardings) for the step function that the
+dry-run lowers — weak-type-correct, shardable, zero allocation
+(``jax.eval_shape`` everywhere).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cb
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import sharding as sh
+from repro.models import init_params, make_decode_cache
+from repro.train.optimizer import init_opt_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def params_spec(cfg: ModelConfig, *, serving: bool = False):
+    spec = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+    if serving:
+        # inference ships bf16 checkpoints (fp32 masters stay in training)
+        spec = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype),
+            spec)
+    return spec
+
+
+def model_batch_spec(cfg: ModelConfig, batch: int, seq: int,
+                     *, for_train: bool) -> Dict[str, Any]:
+    """The model-input dict for one step (tokens + frontend stubs + labels)."""
+    b: Dict[str, Any] = {"tokens": sds((batch, seq), jnp.int32)}
+    if cfg.age_encoding:
+        b["ages"] = sds((batch, seq), jnp.float32)
+        if for_train:
+            b["targets"] = sds((batch, seq), jnp.int32)
+            b["target_dt"] = sds((batch, seq), jnp.float32)
+            b["loss_mask"] = sds((batch, seq), jnp.float32)
+    if cfg.frontend == "vision_patches":
+        b["patches"] = sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    if cfg.frontend == "audio_frames":
+        b["frames"] = sds((batch, max(seq // cfg.enc_len_ratio, 1),
+                           cfg.d_model), jnp.dtype(cfg.dtype))
+    return b
+
+
+def long_context_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k policy (DESIGN.md): attention archs get the sliding-window
+    variant; SSM/hybrid run natively."""
+    if shape.name == "long_500k" and cfg.arch_type != cb.SSM \
+            and cfg.sliding_window is None:
+        return cfg.with_sliding_window(8192)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh
+                ) -> Tuple[Tuple, Tuple]:
+    """-> (args, in_shardings) for the step function of ``shape.mode``.
+
+    train:   (params, opt_state, batch)
+    prefill: (params, batch)
+    decode:  (params, cache, batch, step)
+    """
+    cfg = long_context_cfg(cfg, shape)
+    p_spec = params_spec(cfg, serving=shape.mode != "train")
+    p_shard = sh.param_shardings(mesh, p_spec)
+
+    if shape.mode == "train":
+        o_spec = jax.eval_shape(init_opt_state, p_spec)
+        o_shard = {"mu": p_shard, "nu": p_shard,
+                   "step": NamedSharding(mesh, P())}
+        batch = model_batch_spec(cfg, shape.global_batch, shape.seq_len,
+                                 for_train=True)
+        b_shard = sh.batch_shardings(mesh, batch)
+        return (p_spec, o_spec, batch), (p_shard, o_shard, b_shard)
+
+    if shape.mode == "prefill":
+        batch = model_batch_spec(cfg, shape.global_batch, shape.seq_len,
+                                 for_train=False)
+        b_shard = sh.batch_shardings(mesh, batch)
+        return (p_spec, batch), (p_shard, b_shard)
+
+    # decode: one new token against a cache of shape.seq_len context
+    cache_spec = jax.eval_shape(
+        functools.partial(make_decode_cache, cfg=cfg,
+                          batch=shape.global_batch,
+                          context_len=shape.seq_len), p_spec)
+    c_shard = sh.cache_shardings(mesh, cache_spec)
+    batch = model_batch_spec(cfg, shape.global_batch, 1, for_train=False)
+    batch.pop("frames", None)    # decode reads the cross cache, not frames
+    batch.pop("patches", None)   # patch tokens already live in the KV cache
+    b_shard = sh.batch_shardings(mesh, batch)
+    step_spec = sds((), jnp.int32)
+    return (p_spec, cache_spec, batch, step_spec), \
+        (p_shard, c_shard, b_shard, NamedSharding(mesh, P()))

@@ -1,0 +1,392 @@
+"""Attention: GQA / MHA, sliding-window, cross-attention, and KV caches.
+
+Design notes
+------------
+* The jnp path implements **online-softmax chunked attention** (the same
+  algorithm as the Pallas flash kernel in ``repro.kernels``) so that the
+  lowered HLO never materializes an (S, T) score matrix — mandatory for the
+  32k prefill dry-runs to fit on-device memory.  The inner KV-block body is
+  rematerialized (``jax.checkpoint``) so the backward pass is flash-like too.
+* One **unified ring cache** covers full-cache decode and sliding-window
+  decode: a cache of width ``W`` with per-slot absolute positions.  Writing
+  slot ``step % W`` makes a full cache (``W >= context``) and an SWA ring
+  (``W == window``) the same code path.  Keys are stored *post-RoPE* (RoPE is
+  applied on absolute positions, so relative offsets remain exact at any
+  context depth — this is what makes long_500k ring decoding valid).
+* GQA: queries are grouped ``(n_kv_heads, q_per_kv)``; KV is never repeated
+  in memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, param_dtype
+
+NEG_INF = -1e30
+
+
+class LayerCache(NamedTuple):
+    """Per-layer decode cache (stacked on a leading layer axis by the model)."""
+    k: jax.Array          # (B, Hkv, W, hd)  roped keys
+    v: jax.Array          # (B, Hkv, W, hd)
+    pos: jax.Array        # (B, W) int32 absolute position per slot, -1 = empty
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    pdt = param_dtype(cfg)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, hq, hd)) * s).astype(pdt),
+        "wk": (jax.random.normal(k2, (d, hkv, hd)) * s).astype(pdt),
+        "wv": (jax.random.normal(k3, (d, hkv, hd)) * s).astype(pdt),
+        "wo": (jax.random.normal(k4, (hq, hd, d)) * (hq * hd) ** -0.5).astype(pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), pdt)
+        p["bk"] = jnp.zeros((hkv, hd), pdt)
+        p["bv"] = jnp.zeros((hkv, hd), pdt)
+    return p
+
+
+def _project_qkv(params, xq, xkv, cfg: ModelConfig):
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax chunked attention (jnp flash)
+# ---------------------------------------------------------------------------
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                      window: Optional[int], q_block: int = 512,
+                      kv_block: int = 512, q_per_kv: int = 1,
+                      unroll: bool = False):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd); *_pos int32 (B, S*) or (S*,).
+
+    Invalid KV slots are marked with k_pos < 0.  Returns (B, Sq, Hq, hd).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = q_per_kv
+    assert Hq == Hkv * G
+    scale = hd ** -0.5
+
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (B, Skv))
+
+    if Sq * Skv <= q_block * kv_block:
+        # small problem: one dense masked block (cheaper than scan machinery)
+        qg = q.reshape(B, Sq, Hkv, G, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+        valid = k_pos[:, None, None, None, :] >= 0
+        if causal:
+            rel = q_pos[:, None, None, :, None] - k_pos[:, None, None, None, :]
+            valid = valid & (rel >= 0)
+            if window is not None:
+                valid = valid & (rel < window)
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o.reshape(B, Sq, Hq, hd)
+
+    q, _ = _pad_to(q, 1, q_block)
+    q_pos_p, _ = _pad_to(q_pos, 1, q_block)
+    k, _ = _pad_to(k, 1, kv_block)
+    v, _ = _pad_to(v, 1, kv_block)
+    # padded KV slots must be invalid
+    k_pos_p = jnp.pad(k_pos, ((0, 0), (0, (-Skv) % kv_block)), constant_values=-1)
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // q_block, Skv_p // kv_block
+
+    # (nq, B, Hkv, G, q_block, hd)
+    qb = q.reshape(B, nq, q_block, Hkv, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qpb = q_pos_p.reshape(B, nq, q_block).transpose(1, 0, 2)
+    kb = k.reshape(B, nk, kv_block, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    kpb = k_pos_p.reshape(B, nk, kv_block).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def kv_step(carry, blk, q_i, qp_i):
+        o, m, l = carry
+        k_i, v_i, kp_i = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_i).astype(jnp.float32) * scale
+        valid = kp_i[:, None, None, None, :] >= 0
+        if causal:
+            rel = qp_i[:, None, None, :, None] - kp_i[:, None, None, None, :]
+            valid = valid & (rel >= 0)
+            if window is not None:
+                valid = valid & (rel < window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v_i.dtype), v_i).astype(jnp.float32)
+        return (o_new, m_new, l_new), None
+
+    def q_step(q_i, qp_i):
+        o0 = jnp.zeros((B, Hkv, G, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        if unroll:
+            # straight-line twin (dry-run cost accounting: XLA's CPU cost
+            # analysis counts loop bodies once, so loops are peeled here)
+            c = (o0, m0, l0)
+            for ik in range(nk):
+                c, _ = kv_step(c, (kb[ik], vb[ik], kpb[ik]), q_i, qp_i)
+            o, m, l = c
+        else:
+            (o, m, l), _ = jax.lax.scan(
+                lambda c, b: kv_step(c, b, q_i, qp_i), (o0, m0, l0),
+                (kb, vb, kpb))
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    if unroll:
+        out = jnp.stack([q_step(qb[iq], qpb[iq]) for iq in range(nq)])
+    else:
+        out = jax.lax.map(lambda args: q_step(*args), (qb, qpb))   # (nq, ...)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_p, Hq, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, cache: LayerCache, step, *, window: Optional[int],
+                     q_per_kv: int = 1, k_new=None, v_new=None):
+    """Single-token attention against a ring cache.
+
+    q: (B, 1, Hq, hd) roped; cache.k/v: (B, Hkv, W, hd); step: scalar int32
+    (absolute position of the query token).
+
+    When ``k_new``/``v_new`` (B, 1, Hkv, hd) are given, the cache is treated
+    as *read-only* and the new token is attended via an appended logit — the
+    actual cache write is deferred to one post-scan scatter (keeps XLA from
+    round-tripping the full cache through scan temporaries).  Ring semantics
+    are preserved by masking positions <= step - W.
+    """
+    B, _, Hq, hd = q.shape
+    Hkv, W = cache.k.shape[1], cache.k.shape[2]
+    G = q_per_kv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhwd->bhgw", qg, cache.k).astype(jnp.float32) * scale
+    pos = cache.pos[:, None, None, :]
+    valid = (pos >= 0) & (pos <= step)
+    if k_new is not None:
+        valid = valid & (pos > step - W)          # ring eviction of oldest
+    if window is not None:
+        valid = valid & (pos > step - window)
+    s = jnp.where(valid, s, NEG_INF)
+    if k_new is not None:
+        # merge the new token by online-softmax combination rather than a
+        # concat along W: every W-dim op stays a pure reduction, so GSPMD can
+        # keep a window-sharded cache sharded (a concat forces an all-gather
+        # of the whole score tensor — EXPERIMENTS.md §Perf H4)
+        s_new = jnp.einsum("bhgd,bhd->bhg", qg,
+                           k_new[:, 0]).astype(jnp.float32) * scale
+        m_c = jnp.max(s, axis=-1)                              # (b,h,g)
+        m = jnp.maximum(m_c, s_new)
+        p_c = jnp.exp(s - m[..., None])
+        l = jnp.sum(p_c, axis=-1) + jnp.exp(s_new - m)
+        o = jnp.einsum("bhgw,bhwd->bhgd", p_c.astype(cache.v.dtype), cache.v)
+        o = o + (jnp.exp(s_new - m)[..., None].astype(v_new.dtype)
+                 * v_new[:, 0][:, :, None, :])
+        o = o / l[..., None].astype(o.dtype)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgw,bhwd->bhgd", p.astype(cache.v.dtype), cache.v)
+    return o.reshape(B, 1, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction / update
+# ---------------------------------------------------------------------------
+def empty_cache(cfg: ModelConfig, batch: int, width: int, dtype) -> LayerCache:
+    return LayerCache(
+        k=jnp.zeros((batch, cfg.n_kv_heads, width, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cfg.n_kv_heads, width, cfg.head_dim), dtype),
+        pos=jnp.full((batch, width), -1, jnp.int32),
+    )
+
+
+def cache_from_prefill(k, v, positions, width: int) -> LayerCache:
+    """Pack the (roped) prefill K/V of length S into a ring cache of width W.
+
+    Slot j holds the most recent token with position % W == j.
+    k, v: (B, S, Hkv, hd); positions: (B, S) absolute (assumed 0..S-1 order).
+    """
+    B, S, Hkv, hd = k.shape
+    W = width
+    j = jnp.arange(W)
+    if S <= W:
+        tok = jnp.minimum(j, S - 1)
+        pos_slot = jnp.where(j < S, j, -1)
+    else:
+        tok = S - W + ((j - (S - W)) % W)
+        pos_slot = tok
+    kc = jnp.take(k, tok, axis=1).transpose(0, 2, 1, 3)       # (B, Hkv, W, hd)
+    vc = jnp.take(v, tok, axis=1).transpose(0, 2, 1, 3)
+    base = positions[:, :1] if S <= W else positions[:, :1]
+    pos = jnp.where(pos_slot[None, :] >= 0,
+                    pos_slot[None, :] + base, -1).astype(jnp.int32)
+    return LayerCache(k=kc, v=vc, pos=pos)
+
+
+def cache_write(cache: LayerCache, k_new, v_new, step) -> LayerCache:
+    """Write one token (B, 1, Hkv, hd) at absolute position ``step`` (scalar)."""
+    W = cache.k.shape[2]
+    slot = jnp.mod(step, W)
+    k_t = k_new.transpose(0, 2, 1, 3)   # (B, Hkv, 1, hd)
+    v_t = v_new.transpose(0, 2, 1, 3)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t.astype(cache.k.dtype), slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t.astype(cache.v.dtype), slot, axis=2)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.broadcast_to(jnp.int32(step), (cache.pos.shape[0], 1)), slot, axis=1)
+    return LayerCache(k=k, v=v, pos=pos)
+
+
+def cache_write_stacked(caches: LayerCache, k_news, v_news, step) -> LayerCache:
+    """One scatter for the whole layer stack (the deferred decode write).
+
+    caches: (L, B, Hkv, W, hd) leaves; k_news/v_news: (L, B, 1, Hkv, hd).
+    """
+    W = caches.k.shape[3]
+    slot = jnp.mod(step, W)
+    k_t = k_news.transpose(0, 1, 3, 2, 4)    # (L, B, Hkv, 1, hd)
+    v_t = v_news.transpose(0, 1, 3, 2, 4)
+    k = jax.lax.dynamic_update_slice_in_dim(caches.k, k_t.astype(caches.k.dtype),
+                                            slot, axis=3)
+    v = jax.lax.dynamic_update_slice_in_dim(caches.v, v_t.astype(caches.v.dtype),
+                                            slot, axis=3)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        caches.pos,
+        jnp.broadcast_to(jnp.int32(step), caches.pos.shape[:2] + (1,)),
+        slot, axis=2)
+    return LayerCache(k=k, v=v, pos=pos)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (self or cross), all modes
+# ---------------------------------------------------------------------------
+def attention(params, x, positions, cfg: ModelConfig, *, mode: str,
+              cache: Optional[LayerCache] = None, step=None,
+              memory=None, memory_pos=None, cross: bool = False,
+              causal: bool = True, window: Optional[int] = None,
+              use_rope: bool = True, cache_width: Optional[int] = None,
+              defer_write: bool = False):
+    """Run one attention layer.
+
+    mode: "dense"   — full-sequence self/cross attention (train / encoder)
+          "prefill" — like dense, but also returns a ring cache
+          "decode"  — one-token step against ``cache`` at position ``step``
+    For cross-attention pass ``memory`` (B, M, d) in dense/prefill modes, or
+    ``cross=True`` in decode mode (the cache then holds the projected memory
+    K/V, written at prefill).
+    """
+    dt = x.dtype
+    G = cfg.q_per_kv
+    win = window if window is not None else cfg.sliding_window
+
+    if mode == "decode":
+        if cross:
+            # cross-attention at decode: cache holds projected memory K/V
+            q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+            if "bq" in params:
+                q = q + params["bq"].astype(dt)
+            o = decode_attention(q, cache, jnp.int32(2**30), window=None,
+                                 q_per_kv=G)
+            out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+            return out, cache
+        q, k, v = _project_qkv(params, x, x, cfg)
+        if use_rope:
+            pos1 = jnp.reshape(step, (1, 1))
+            q = apply_rope(q, pos1, cfg.rope_theta)
+            k = apply_rope(k, pos1, cfg.rope_theta)
+        if defer_write:
+            o = decode_attention(q, cache, step, window=win, q_per_kv=G,
+                                 k_new=k, v_new=v)
+            out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+            return out, (k, v)
+        cache = cache_write(cache, k, v, step)
+        o = decode_attention(q, cache, step, window=win, q_per_kv=G)
+        out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+        return out, cache
+
+    if memory is not None:  # dense/prefill cross-attention
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        if "bq" in params:
+            q = q + params["bq"].astype(dt)
+        k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(dt))
+        if "bk" in params:
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+        mpos = (memory_pos if memory_pos is not None
+                else jnp.arange(memory.shape[1], dtype=jnp.int32))
+        qb = kb = 512
+        if cfg.attn_direct:
+            qb = -(-max(-(-x.shape[1] // 4), 512) // 128) * 128
+            kb = -(-max(-(-memory.shape[1] // 4), 512) // 128) * 128
+        o = chunked_attention(q, k, v, positions, mpos, causal=False,
+                              window=None, q_per_kv=G, q_block=qb,
+                              kv_block=kb, unroll=cfg.attn_direct)
+        out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+        if mode == "prefill":
+            M = memory.shape[1]
+            mpos2 = jnp.broadcast_to(mpos[None], (x.shape[0], M)) if mpos.ndim == 1 else mpos
+            new_cache = cache_from_prefill(k, v, mpos2, M)
+            return out, new_cache
+        return out, None
+
+    q, k, v = _project_qkv(params, x, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if cfg.seq_shard_attn:
+        # context parallelism: shard queries over the model axis (KV layout
+        # is left to GSPMD — explicitly replicating it forced per-layer
+        # all-gathers, see EXPERIMENTS.md §Perf iteration 2)
+        from jax.sharding import PartitionSpec as P
+        q = jax.lax.with_sharding_constraint(q, P(None, "model", None, None))
+    # cost-accounting mode uses big straight-line blocks (nq*nk <= 16)
+    qb = max(-(-S // 4), 512) if cfg.attn_direct else 512
+    qb = -(-qb // 128) * 128
+    o = chunked_attention(q, k, v, positions, positions, causal=causal,
+                          window=win, q_per_kv=G, q_block=qb, kv_block=qb,
+                          unroll=cfg.attn_direct)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    if mode == "prefill":
+        W = cache_width or (win if win is not None else x.shape[1])
+        pos2 = (jnp.broadcast_to(positions[None], x.shape[:2])
+                if positions.ndim == 1 else positions)
+        new_cache = cache_from_prefill(k, v, pos2, W)
+        return out, new_cache
+    return out, None

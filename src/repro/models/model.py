@@ -1,0 +1,543 @@
+"""Composable model definitions for every assigned architecture family.
+
+Entry points (all pure functions over parameter pytrees):
+
+* ``init_params(cfg, key)`` — parameter pytree.  Layer stacks are vmapped so
+  they carry a leading layer axis and are ``lax.scan``-ed; compile time is
+  O(1) in depth (mandatory for the 64-layer × 512-device CPU dry-run).
+* ``forward(params, cfg, batch, mode)`` — ``mode="train"`` returns
+  ``{"logits", "aux_loss"}``; ``mode="prefill"`` additionally returns the
+  decode ``cache``.
+* ``decode_step(params, cfg, cache, batch, step)`` — one-token serving step
+  (the object lowered by decode dry-run shapes).
+
+Batch dict keys by family:
+  dense/moe/ssm/hybrid: tokens (B,S) int32 [+ ages (B,S) f32 for Delphi cfgs]
+  vlm:   tokens (B,S) + patches (B, n_frontend_tokens, d_model)   [stub]
+  audio: tokens (B,S) + frames (B, M, d_model)                    [stub]
+
+Cache pytrees (leading axis = layer / application):
+  dense/moe/vlm: {"self": LayerCache[L]}
+  ssm:           {"ssm": SSMCache[L]}
+  hybrid:        {"ssm": SSMCache[L], "attn": LayerCache[n_apps]}
+  audio:         {"self": LayerCache[L], "cross": LayerCache[L]}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import LayerCache
+from repro.models.layers import (act_dtype, age_encoding, apply_mlp, apply_norm,
+                                 embed_tokens, init_embed, init_mlp, init_norm,
+                                 logits_head)
+from repro.models.ssm import SSMCache
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_transformer_layer(key, cfg: ModelConfig, *, cross: bool = False,
+                           moe: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn_norm": init_norm(cfg, cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+        "mlp_norm": init_norm(cfg, cfg.d_model),
+    }
+    if moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    if cross:
+        p["cross_norm"] = init_norm(cfg, cfg.d_model)
+        p["cross_attn"] = attn_lib.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    return {"norm": init_norm(cfg, cfg.d_model),
+            "ssm": ssm_lib.init_ssm(key, cfg)}
+
+
+def _stacked(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    """Hybrid: number of shared-attention applications over the layer stack."""
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"embed": init_embed(ks[0], cfg),
+                         "final_norm": init_norm(cfg, cfg.d_model)}
+    t = cfg.arch_type
+    if t in (cb.DENSE, cb.VLM):
+        p["layers"] = _stacked(lambda k: init_transformer_layer(k, cfg),
+                               ks[1], cfg.n_layers)
+    elif t == cb.MOE:
+        p["layers"] = _stacked(lambda k: init_transformer_layer(k, cfg, moe=True),
+                               ks[1], cfg.n_layers)
+    elif t == cb.SSM:
+        p["layers"] = _stacked(lambda k: init_mamba_layer(k, cfg), ks[1], cfg.n_layers)
+    elif t == cb.HYBRID:
+        p["layers"] = _stacked(lambda k: init_mamba_layer(k, cfg), ks[1], cfg.n_layers)
+        p["shared_attn"] = init_transformer_layer(ks[2], cfg)
+    elif t in (cb.AUDIO, cb.ENC_DEC):
+        p["encoder"] = _stacked(lambda k: init_transformer_layer(k, cfg),
+                                ks[1], cfg.n_encoder_layers)
+        p["enc_norm"] = init_norm(cfg, cfg.d_model)
+        p["layers"] = _stacked(lambda k: init_transformer_layer(k, cfg, cross=True),
+                               ks[2], cfg.n_layers)
+    else:
+        raise ValueError(t)
+    return p
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+def transformer_layer(lp, x, positions, cfg: ModelConfig, *, mode: str,
+                      cache: Optional[LayerCache] = None, step=None,
+                      cross_cache: Optional[LayerCache] = None,
+                      memory=None, causal: bool = True,
+                      cache_width: Optional[int] = None,
+                      moe_impl: str = "dense_scan",
+                      defer_write: bool = False):
+    """Pre-norm transformer block.  Returns (x, cache, cross_cache, aux).
+
+    In decode mode with ``defer_write``, the second return is the (k, v) pair
+    of the new token instead of an updated cache (one post-scan scatter)."""
+    use_rope = not cfg.age_encoding
+    a, new_cache = attn_lib.attention(
+        lp["attn"], apply_norm(lp["attn_norm"], x, cfg), positions, cfg,
+        mode=mode, cache=cache, step=step, causal=causal,
+        use_rope=use_rope, cache_width=cache_width, defer_write=defer_write)
+    x = x + a
+    new_cross = cross_cache
+    if "cross_attn" in lp:
+        h = apply_norm(lp["cross_norm"], x, cfg)
+        if mode == "decode":
+            c, new_cross = attn_lib.attention(
+                lp["cross_attn"], h, positions, cfg, mode="decode",
+                cache=cross_cache, step=step, cross=True)
+        else:
+            c, new_cross = attn_lib.attention(
+                lp["cross_attn"], h, positions, cfg, mode=mode, memory=memory)
+        x = x + c
+    h = apply_norm(lp["mlp_norm"], x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        y, aux = moe_lib.apply_moe(lp["moe"], h, cfg, impl=moe_impl)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg)
+    return x + y, new_cache, new_cross, aux
+
+
+def mamba_layer(lp, x, cfg: ModelConfig, *, mode: str,
+                cache: Optional[SSMCache] = None):
+    h = apply_norm(lp["norm"], x, cfg)
+    if mode == "decode":
+        y, new_cache = ssm_lib.ssm_decode_step(lp["ssm"], h, cache, cfg)
+        return x + y, new_cache
+    if mode == "prefill":
+        y, new_cache = ssm_lib.ssm_forward(lp["ssm"], h, cfg, return_state=True)
+        return x + y, new_cache
+    return x + ssm_lib.ssm_forward(lp["ssm"], h, cfg), None
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends
+# ---------------------------------------------------------------------------
+def _embed_input(params, cfg: ModelConfig, batch, *, positions=None):
+    """Returns (x (B, S', d), positions (S'? or (B,S')), text_offset)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.age_encoding:
+        x = x + age_encoding(batch["ages"], cfg.d_model).astype(x.dtype)
+    offset = 0
+    if cfg.frontend == "vision_patches":
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, pos, offset
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def _slice_layer(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _stack_trees(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _transformer_stack_unrolled(layers, x, positions, cfg, *, mode,
+                                memory=None, causal=True, caches=None,
+                                cross_caches=None, step=None, cache_width=None,
+                                moe_impl="dense_scan", has_cross=False):
+    """Python-loop twin of _transformer_stack (cfg.unroll_layers cost mode)."""
+    L = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    aux = jnp.zeros((), jnp.float32)
+    out_caches, out_cross, kvs = [], [], []
+    for i in range(L):
+        lp = _slice_layer(layers, i)
+        if mode == "decode":
+            x, kv, _, _ = transformer_layer(
+                lp, x, positions, cfg, mode="decode",
+                cache=_slice_layer(caches, i),
+                cross_cache=(_slice_layer(cross_caches, i) if has_cross
+                             else None),
+                step=step, moe_impl=moe_impl, defer_write=True)
+            kvs.append(kv)
+        else:
+            def call(lp_, h_):
+                return transformer_layer(
+                    lp_, h_, positions, cfg, mode=mode, memory=memory,
+                    causal=causal, cache_width=cache_width,
+                    moe_impl=moe_impl)
+            x, nc, nx, a = _maybe_remat(call, cfg)(lp, x)
+            aux = aux + a
+            if mode == "prefill":
+                out_caches.append(nc)
+                out_cross.append(nx)
+    if mode == "decode":
+        k_news, v_news = _stack_trees(kvs)
+        caches = attn_lib.cache_write_stacked(caches, k_news, v_news, step)
+        return x, caches, cross_caches, aux
+    if mode == "prefill":
+        return (x, _stack_trees(out_caches),
+                (_stack_trees(out_cross) if has_cross else None), aux)
+    return x, None, None, aux
+
+
+def _transformer_stack(layers, x, positions, cfg, *, mode, memory=None,
+                       causal=True, caches=None, cross_caches=None, step=None,
+                       cache_width=None, moe_impl="dense_scan", has_cross=False):
+    """Scan a stacked transformer.  In decode mode caches are scan xs; in
+    prefill they are scan ys; in train they don't exist."""
+    if cfg.unroll_layers:
+        return _transformer_stack_unrolled(
+            layers, x, positions, cfg, mode=mode, memory=memory,
+            causal=causal, caches=caches, cross_caches=cross_caches,
+            step=step, cache_width=cache_width, moe_impl=moe_impl,
+            has_cross=has_cross)
+    if mode == "train":
+        def body(h, lp):
+            h, _, _, aux = transformer_layer(
+                lp, h, positions, cfg, mode="train", memory=memory,
+                causal=causal, moe_impl=moe_impl)
+            return h, aux
+        x, auxes = jax.lax.scan(_maybe_remat(body, cfg), x, layers)
+        return x, None, None, jnp.sum(auxes)
+
+    if mode == "prefill":
+        def body(h, lp):
+            h, nc, nx, aux = transformer_layer(
+                lp, h, positions, cfg, mode="prefill", memory=memory,
+                causal=causal, cache_width=cache_width, moe_impl=moe_impl)
+            if not has_cross:
+                nx = jnp.zeros((0,))
+            return h, (nc, nx, aux)
+        x, (caches, cross_caches, auxes) = jax.lax.scan(
+            _maybe_remat(body, cfg), x, layers)
+        return x, caches, (cross_caches if has_cross else None), jnp.sum(auxes)
+
+    # decode: caches are read-only inside the scan; new-token K/V are
+    # collected and written with ONE stacked scatter afterwards (avoids
+    # round-tripping the full cache through scan temporaries)
+    if has_cross:
+        def body(h, xs):
+            lp, c, xc = xs
+            h, kv, _, _ = transformer_layer(
+                lp, h, positions, cfg, mode="decode", cache=c, cross_cache=xc,
+                step=step, moe_impl=moe_impl, defer_write=True)
+            return h, kv
+        x, (k_news, v_news) = jax.lax.scan(
+            body, x, (layers, caches, cross_caches))
+        caches = attn_lib.cache_write_stacked(caches, k_news, v_news, step)
+        return x, caches, cross_caches, jnp.zeros((), jnp.float32)
+
+    def body(h, xs):
+        lp, c = xs
+        h, kv, _, _ = transformer_layer(
+            lp, h, positions, cfg, mode="decode", cache=c, step=step,
+            moe_impl=moe_impl, defer_write=True)
+        return h, kv
+    x, (k_news, v_news) = jax.lax.scan(body, x, (layers, caches))
+    caches = attn_lib.cache_write_stacked(caches, k_news, v_news, step)
+    return x, caches, None, jnp.zeros((), jnp.float32)
+
+
+def _ssm_stack(layers, x, cfg, *, mode, caches=None):
+    if cfg.unroll_layers:   # cost-accounting mode (python loop, exact FLOPs)
+        L = jax.tree_util.tree_leaves(layers)[0].shape[0]
+        outs = []
+        for i in range(L):
+            lp = _slice_layer(layers, i)
+            c = _slice_layer(caches, i) if caches is not None else None
+            def call(lp_, h_):
+                return mamba_layer(lp_, h_, cfg, mode=mode, cache=c)
+            if mode == "train":
+                x, _ = _maybe_remat(call, cfg)(lp, x)
+            else:
+                x, nc = call(lp, x)
+                outs.append(nc)
+        return x, (_stack_trees(outs) if outs else None)
+    if mode == "train":
+        def body(h, lp):
+            h, _ = mamba_layer(lp, h, cfg, mode="train")
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, layers)
+        return x, None
+    if mode == "prefill":
+        def body(h, lp):
+            h, nc = mamba_layer(lp, h, cfg, mode="prefill")
+            return h, nc
+        x, caches = jax.lax.scan(_maybe_remat(body, cfg), x, layers)
+        return x, caches
+    def body(h, xs):
+        lp, c = xs
+        h, nc = mamba_layer(lp, h, cfg, mode="decode", cache=c)
+        return h, nc
+    x, caches = jax.lax.scan(body, x, (layers, caches))
+    return x, caches
+
+
+def _hybrid_stack(params, x, positions, cfg, *, mode, ssm_caches=None,
+                  attn_caches=None, step=None, cache_width=None):
+    """Zamba2-style: scan Mamba layers; apply the weight-shared attention
+    block before every ``cfg.attn_every``-th layer.  Attention caches are
+    stacked per *application* and carried through the scan."""
+    L = cfg.n_layers
+    k = cfg.attn_every
+    shared = params["shared_attn"]
+    idxs = jnp.arange(L, dtype=jnp.int32)
+
+    if cfg.unroll_layers:   # cost-accounting mode: static periodic structure
+        ssm_outs = []
+        attn_list = ([None] * n_attn_apps(cfg) if mode != "train" else None)
+        for i in range(L):
+            if i % k == 0:
+                app = i // k
+                if mode == "train":
+                    x, _, _, _ = transformer_layer(shared, x, positions, cfg,
+                                                   mode="train")
+                elif mode == "prefill":
+                    x, nc, _, _ = transformer_layer(
+                        shared, x, positions, cfg, mode="prefill",
+                        cache_width=cache_width)
+                    attn_list[app] = nc
+                else:
+                    c = _slice_layer(attn_caches, app)
+                    x, nc, _, _ = transformer_layer(
+                        shared, x, positions, cfg, mode="decode", cache=c,
+                        step=step)
+                    attn_list[app] = nc
+            lp = _slice_layer(params["layers"], i)
+            c = _slice_layer(ssm_caches, i) if ssm_caches is not None else None
+            x, nc = mamba_layer(lp, x, cfg, mode=mode, cache=c)
+            if mode != "train":
+                ssm_outs.append(nc)
+        if mode == "train":
+            return x, None, None
+        return x, _stack_trees(ssm_outs), _stack_trees(attn_list)
+
+    def apply_shared(h, app_idx, ac_all):
+        if mode == "train":
+            h2, _, _, _ = transformer_layer(shared, h, positions, cfg,
+                                            mode="train")
+            return h2, ac_all
+        if mode == "prefill":
+            h2, nc, _, _ = transformer_layer(shared, h, positions, cfg,
+                                             mode="prefill",
+                                             cache_width=cache_width)
+            ac_all = jax.tree_util.tree_map(
+                lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                    buf, new.astype(buf.dtype), app_idx, 0), ac_all, nc)
+            return h2, ac_all
+        c = jax.tree_util.tree_map(
+            lambda buf: jax.lax.dynamic_index_in_dim(buf, app_idx, 0,
+                                                     keepdims=False), ac_all)
+        h2, nc, _, _ = transformer_layer(shared, h, positions, cfg,
+                                         mode="decode", cache=c, step=step)
+        ac_all = jax.tree_util.tree_map(
+            lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                buf, new.astype(buf.dtype), app_idx, 0), ac_all, nc)
+        return h2, ac_all
+
+    def body(carry, xs):
+        h, ac_all = carry
+        if mode == "decode":
+            lp, c, i = xs
+        else:
+            lp, i = xs
+            c = None
+        h, ac_all = jax.lax.cond(
+            i % k == 0,
+            lambda hh, aa: apply_shared(hh, i // k, aa),
+            lambda hh, aa: (hh, aa),
+            h, ac_all)
+        h, nc = mamba_layer(lp, h, cfg, mode=mode, cache=c)
+        return (h, ac_all), nc
+
+    body = _maybe_remat(body, cfg) if mode != "decode" else body
+    if mode == "decode":
+        (x, attn_caches), ssm_caches = jax.lax.scan(
+            body, (x, attn_caches), (params["layers"], ssm_caches, idxs))
+        return x, ssm_caches, attn_caches
+    if mode == "prefill":
+        (x, attn_caches), ssm_caches = jax.lax.scan(
+            body, (x, attn_caches), (params["layers"], idxs))
+        return x, ssm_caches, attn_caches
+    dummy = _empty_hybrid_attn_cache(cfg, x.shape[0], 1, x.dtype)
+    (x, _), _ = jax.lax.scan(body, (x, dummy), (params["layers"], idxs))
+    return x, None, None
+
+
+def _empty_hybrid_attn_cache(cfg: ModelConfig, batch: int, width: int, dtype):
+    one = attn_lib.empty_cache(cfg, batch, width, dtype)
+    n = n_attn_apps(cfg)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            mode: str = "train", cache_width: Optional[int] = None,
+            moe_impl: str = "dense_scan") -> Dict[str, Any]:
+    """mode in {"train", "prefill"}."""
+    assert mode in ("train", "prefill")
+    t = cfg.arch_type
+    x, pos, offset = _embed_input(params, cfg, batch)
+    B = x.shape[0]
+    out: Dict[str, Any] = {"text_offset": offset}
+    aux = jnp.zeros((), jnp.float32)
+
+    if t in (cb.DENSE, cb.VLM, cb.MOE):
+        x, caches, _, aux = _transformer_stack(
+            params["layers"], x, pos, cfg, mode=mode,
+            cache_width=cache_width, moe_impl=moe_impl)
+        if mode == "prefill":
+            out["cache"] = {"self": caches}
+    elif t == cb.SSM:
+        x, caches = _ssm_stack(params["layers"], x, cfg, mode=mode)
+        if mode == "prefill":
+            out["cache"] = {"ssm": caches}
+    elif t == cb.HYBRID:
+        attn_c = None
+        if mode == "prefill":
+            W = cache_width or (cfg.sliding_window or x.shape[1])
+            attn_c = _empty_hybrid_attn_cache(cfg, B, W, act_dtype(cfg))
+        x, ssm_c, attn_c = _hybrid_stack(
+            params, x, pos, cfg, mode=mode, attn_caches=attn_c,
+            cache_width=cache_width)
+        if mode == "prefill":
+            out["cache"] = {"ssm": ssm_c, "attn": attn_c}
+    elif t in (cb.AUDIO, cb.ENC_DEC):
+        frames = batch["frames"].astype(act_dtype(cfg))
+        fpos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        mem, _, _, _ = _transformer_stack(
+            params["encoder"], frames, fpos, cfg, mode="train", causal=False)
+        mem = apply_norm(params["enc_norm"], mem, cfg)
+        x, caches, cross, _ = _transformer_stack(
+            params["layers"], x, pos, cfg, mode=mode, memory=mem,
+            cache_width=cache_width, has_cross=True)
+        if mode == "prefill":
+            out["cache"] = {"self": caches, "cross": cross}
+    else:
+        raise ValueError(t)
+
+    if mode == "prefill":
+        # decode bootstrap only needs the last position; slicing before the
+        # head keeps the (B, S, V) fp32 logits out of the live set
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg)
+    out["logits"] = logits_head(params["embed"], x, cfg)
+    out["aux_loss"] = aux
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], step,
+                *, moe_impl: str = "dense_scan") -> Dict[str, Any]:
+    """One-token decode.  batch["tokens"]: (B, 1); step: scalar int32 absolute
+    position of the new token.  Returns {"logits": (B, 1, V), "cache": ...}."""
+    t = cfg.arch_type
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.age_encoding:
+        x = x + age_encoding(batch["ages"], cfg.d_model).astype(x.dtype)
+    pos = jnp.reshape(step, (1,)).astype(jnp.int32)
+
+    if t in (cb.DENSE, cb.VLM, cb.MOE):
+        x, caches, _, _ = _transformer_stack(
+            params["layers"], x, pos, cfg, mode="decode",
+            caches=cache["self"], step=step, moe_impl=moe_impl)
+        new_cache = {"self": caches}
+    elif t == cb.SSM:
+        x, caches = _ssm_stack(params["layers"], x, cfg, mode="decode",
+                               caches=cache["ssm"])
+        new_cache = {"ssm": caches}
+    elif t == cb.HYBRID:
+        x, ssm_c, attn_c = _hybrid_stack(
+            params, x, pos, cfg, mode="decode", ssm_caches=cache["ssm"],
+            attn_caches=cache["attn"], step=step)
+        new_cache = {"ssm": ssm_c, "attn": attn_c}
+    elif t in (cb.AUDIO, cb.ENC_DEC):
+        x, caches, cross, _ = _transformer_stack(
+            params["layers"], x, pos, cfg, mode="decode", caches=cache["self"],
+            cross_caches=cache["cross"], step=step, has_cross=True)
+        new_cache = {"self": caches, "cross": cross}
+    else:
+        raise ValueError(t)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return {"logits": logits_head(params["embed"], x, cfg), "cache": new_cache}
+
+
+def make_decode_cache(params, cfg: ModelConfig, batch: int, context_len: int):
+    """Build an empty decode cache shaped as if ``context_len`` tokens had been
+    processed (what the decode dry-run shapes lower against)."""
+    dtype = act_dtype(cfg)
+    W = min(cfg.sliding_window or context_len, context_len)
+    L = cfg.n_layers
+
+    def stack(c, n):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+    t = cfg.arch_type
+    if t in (cb.DENSE, cb.VLM, cb.MOE):
+        return {"self": stack(attn_lib.empty_cache(cfg, batch, W, dtype), L)}
+    if t == cb.SSM:
+        return {"ssm": stack(ssm_lib.empty_ssm_cache(cfg, batch, dtype), L)}
+    if t == cb.HYBRID:
+        return {"ssm": stack(ssm_lib.empty_ssm_cache(cfg, batch, dtype), L),
+                "attn": _empty_hybrid_attn_cache(cfg, batch, W, dtype)}
+    if t in (cb.AUDIO, cb.ENC_DEC):
+        M = cfg.dec_enc_len
+        return {"self": stack(attn_lib.empty_cache(cfg, batch, W, dtype), L),
+                "cross": stack(attn_lib.empty_cache(cfg, batch, M, dtype), L)}
+    raise ValueError(t)

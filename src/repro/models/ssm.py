@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + decode step.
+
+Follows the SSD formulation of arXiv:2405.21060 with n_groups=1:
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t ⊗ x_t        (per head h)
+    y_t = C_t · h_t + D_h x_t
+
+Training/prefill uses the chunked algorithm: an intra-chunk quadratic term
+(MXU-friendly, the Pallas kernel target in ``repro.kernels.ssd_scan``) plus an
+inter-chunk recurrence over chunk states.  Decode is the O(1) recurrent step
+against a constant-size state — this is why SSM/hybrid archs run long_500k
+natively (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import param_dtype
+
+
+class SSMCache(NamedTuple):
+    """Per-layer decode state (stacked on a leading layer axis by the model)."""
+    h: jax.Array       # (B, H, N, P) fp32 SSD state
+    conv: jax.Array    # (B, conv_w, conv_ch) rolling conv input buffer
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig):
+    pdt = param_dtype(cfg)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    ch = conv_channels(cfg)
+    d_in_proj = 2 * di + 2 * N + H          # z, xBC, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, d_in_proj)) * d ** -0.5).astype(pdt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, ch)) * cfg.ssm_conv ** -0.5).astype(pdt),
+        "conv_b": jnp.zeros((ch,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pdt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(pdt),  # softplus^-1
+        "D": jnp.ones((H,), pdt),
+        "norm_scale": jnp.ones((di,), pdt),
+        "out_proj": (jax.random.normal(k4, (di, d)) * di ** -0.5).astype(pdt),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, C); w: (W, C) depthwise kernel; causal padding."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # (B, S, C) = sum_k xp[:, s+k, :] * w[k, :]
+    out = jnp.zeros_like(x)
+    for k in range(W):  # W is 4: unrolled adds beat conv_general on all backends
+        out = out + xp[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B, S, N).  Returns (y (B, S, H, P), h_last (B, H, N, P) fp32).
+    S must be a multiple of ``chunk`` (callers pad).
+    """
+    b, s, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    c = s // Q
+    f32 = jnp.float32
+
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, c, Q, H, P)
+    Bc = Bm.astype(f32).reshape(b, c, Q, N)
+    Cc = Cm.astype(f32).reshape(b, c, Q, N)
+    dtA = (dt.astype(f32) * A.astype(f32)).reshape(b, c, Q, H)   # negative
+    cum = jnp.cumsum(dtA, axis=2)                                 # (b,c,Q,H)
+
+    # --- intra-chunk (quadratic within chunk; Pallas kernel target) --------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (b,c,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xdt)
+
+    # --- chunk states -------------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (b,c,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (b,c,H)
+
+    # --- inter-chunk recurrence --------------------------------------------
+    h_init = (jnp.zeros((b, H, N, P), f32) if h0 is None else h0.astype(f32))
+
+    def step(h, inp):
+        d_c, s_c = inp
+        h_new = d_c[:, :, None, None] * h + s_c
+        return h_new, h                                           # emit state BEFORE chunk
+
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                      # (b,c,H,N,P)
+
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_prev, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, H, P)
+    return y.astype(x.dtype), h_last
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _gated_norm(y, z, scale, eps: float = 1e-5):
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_forward(params, x, cfg: ModelConfig, h0=None, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, d_model)."""
+    dt_act = x.dtype
+    B_, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ params["in_proj"].astype(dt_act)
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_depthwise_conv(
+        xBC, params["conv_w"].astype(dt_act), params["conv_b"].astype(dt_act)))
+    x_ssm, Bm, Cm = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = x_ssm.reshape(B_, S, H, P)
+    # pad to a chunk multiple
+    Q = cfg.ssm_chunk
+    pad = (-S) % Q
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> identity steps
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+
+    y, h_last = ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, Q, h0=h0)
+    y = y[:, :S]
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, S, di)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = y @ params["out_proj"].astype(dt_act)
+    if return_state:
+        conv_w = cfg.ssm_conv
+        # last conv_w raw (pre-conv) xBC inputs, zero-padded on the left
+        x_tail = x[:, max(S - conv_w, 0):, :]
+        xBC_raw = x_tail @ params["in_proj"][:, di:di + di + 2 * N].astype(dt_act)
+        pad_l = max(conv_w - S, 0)
+        tail = xBC_raw
+        if pad_l:
+            tail = jnp.pad(tail, ((0, 0), (pad_l, 0), (0, 0)))
+        return out, SSMCache(h=h_last, conv=tail)
+    return out
+
+
+def ssm_decode_step(params, x, cache: SSMCache, cfg: ModelConfig):
+    """One-token recurrent step.  x: (B, 1, d_model)."""
+    dt_act = x.dtype
+    B_ = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(dt_act)           # (B, ...)
+    z, xBC_new, dt_raw = _split_proj(zxbcdt, cfg)
+    conv = jnp.concatenate([cache.conv[:, 1:], xBC_new[:, None, :].astype(cache.conv.dtype)], axis=1)
+    xBC = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv.astype(dt_act), params["conv_w"].astype(dt_act))
+        + params["conv_b"].astype(dt_act))
+    x_ssm, Bm, Cm = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))     # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                               # (B,H)
+
+    xh = x_ssm.reshape(B_, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt, xh)
+    h = a[:, :, None, None] * cache.h + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B_, di).astype(dt_act)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = (y @ params["out_proj"].astype(dt_act))[:, None, :]
+    return out, SSMCache(h=h, conv=conv)
+
+
+def empty_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        h=jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv, conv_channels(cfg)), dtype),
+    )

@@ -1,0 +1,95 @@
+"""Model export: the ONNX-conversion step of the paper, JAX-native.
+
+``export_model`` serializes the *inference graph* (``get_logits``) via
+``jax.export`` into a StableHLO artifact plus a parameter archive and a FAIR
+manifest.  The artifact directory is self-contained:
+
+    model.bin       serialized StableHLO module (jax.export wire format)
+    params.npz      parameter arrays keyed by flattened pytree path
+    manifest.json   FAIR metadata (checksums, signature, provenance, sampling)
+
+The loading side (``sdk.runtime``) imports **no model code** — exactly the
+decoupling the paper achieves with ONNX (DESIGN.md §2, claim C2).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import export as jexport
+
+from repro.configs.base import ModelConfig
+from repro.core.delphi import get_logits
+from repro.models import forward
+from repro.sdk.manifest import build_manifest, write_manifest
+
+
+def _flatten_params(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def nest(flat: Dict[str, np.ndarray]) -> Dict:
+    """Rebuild the nested-dict pytree from flattened 'a/b/c' keys."""
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = val
+    return root
+
+
+def export_model(params, cfg: ModelConfig, out_dir: str, *,
+                 seq_len: Optional[int] = None,
+                 logits_fn: Callable = None) -> str:
+    """Export the fixed-shape inference graph + params + manifest.
+
+    The exported callable is ``f(params, tokens[, ages]) -> logits`` with
+    tokens (1, seq_len) int32 (the paper's App also exports a fixed-axes
+    single-trajectory graph).
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    S = seq_len or cfg.max_seq_len
+    delphi = cfg.age_encoding
+
+    if logits_fn is None:
+        if delphi:
+            def logits_fn(p, tokens, ages):
+                return get_logits(p, cfg, tokens, ages)
+        else:
+            def logits_fn(p, tokens):
+                return forward(p, cfg, {"tokens": tokens},
+                               mode="train")["logits"]
+
+    p_spec = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    args = [p_spec, jax.ShapeDtypeStruct((1, S), jnp.int32)]
+    if delphi:
+        args.append(jax.ShapeDtypeStruct((1, S), jnp.float32))
+
+    exported = jexport.export(jax.jit(logits_fn))(*args)
+    blob = exported.serialize()
+    with open(os.path.join(out_dir, "model.bin"), "wb") as f:
+        f.write(blob)
+    np.savez(os.path.join(out_dir, "params.npz"), **_flatten_params(params))
+
+    signature = {
+        "inputs": (
+            [{"name": "tokens", "shape": [1, S], "dtype": "int32"}]
+            + ([{"name": "ages", "shape": [1, S], "dtype": "float32"}]
+               if delphi else [])),
+        "outputs": [{"name": "logits", "shape": [1, S, cfg.vocab_size],
+                     "dtype": "float32"}],
+        "params": "params.npz (flattened pytree paths)",
+    }
+    write_manifest(build_manifest(cfg, out_dir, signature=signature), out_dir)
+    return out_dir

@@ -1,0 +1,88 @@
+"""FAIR manifest for exported model artifacts.
+
+The paper's FAIR claim rests on the exported artifact being Findable (stable
+identifiers + checksums), Accessible (self-contained directory, no framework
+needed), Interoperable (an open interchange format — StableHLO here, ONNX in
+the paper), and Reusable (documented signature, provenance, license, and the
+sampling semantics needed to *use* the logits).  This module materializes
+those fields as ``manifest.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict
+
+from repro.configs.base import ModelConfig
+
+SPEC_VERSION = "1.0"
+INTERCHANGE = "stablehlo+jax.export"   # the ONNX analogue (DESIGN.md §2)
+
+
+def sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return "sha256:" + h.hexdigest()
+
+
+def build_manifest(cfg: ModelConfig, artifact_dir: str, *,
+                   signature: Dict[str, Any],
+                   provenance: str = "Duarte et al. 2026; Shmatko et al. 2025 "
+                                     "(Delphi-2M); trained on synthetic data",
+                   license_id: str = "Apache-2.0") -> Dict[str, Any]:
+    files = {}
+    for name in sorted(os.listdir(artifact_dir)):
+        if name == "manifest.json":
+            continue
+        files[name] = sha256_file(os.path.join(artifact_dir, name))
+    return {
+        "spec_version": SPEC_VERSION,
+        # F — findability
+        "name": cfg.name,
+        "identifier": f"repro/{cfg.name}@{files.get('model.bin', 'unhashed')[:23]}",
+        "description": "Generative disease-history model (event + "
+                       "time-to-event logits).",
+        # A — accessibility
+        "files": files,
+        "requires": ["any XLA runtime with StableHLO support (CPU/TPU/GPU)",
+                     "numpy (host-side pre/post-processing only)"],
+        # I — interoperability
+        "interchange_format": INTERCHANGE,
+        "signature": signature,
+        # R — reusability
+        "provenance": provenance,
+        "license": license_id,
+        "config": dataclasses.asdict(cfg),
+        "sampling": {
+            "method": "competing-exponential time-to-event (paper eq. 1)",
+            "formula": "t_i = -exp(-logit_i) * ln(u_i); next = argmin_i t_i",
+            "termination": {"death_token": cfg.death_token,
+                            "max_age_years": cfg.max_age},
+        },
+        "privacy": "inference requires only this artifact; no network calls, "
+                   "no server-side state (paper claim C5)",
+    }
+
+
+def write_manifest(manifest: Dict[str, Any], artifact_dir: str) -> str:
+    path = os.path.join(artifact_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, default=str)
+    return path
+
+
+def read_manifest(artifact_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(artifact_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def verify_checksums(artifact_dir: str) -> bool:
+    m = read_manifest(artifact_dir)
+    for name, digest in m["files"].items():
+        if sha256_file(os.path.join(artifact_dir, name)) != digest:
+            return False
+    return True

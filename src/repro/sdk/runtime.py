@@ -1,0 +1,52 @@
+"""Artifact runtime — the ONNX-Runtime analogue.
+
+Loads an exported artifact directory and executes the inference graph.
+Deliberately imports **nothing** from ``repro.models`` / ``repro.core`` /
+``repro.configs``: the graph semantics live entirely in the serialized
+StableHLO module, the parameters in ``params.npz``, and the metadata in
+``manifest.json`` — framework-decoupled exactly as the paper's ONNX artifact
+is (Reusability / Interoperability, claims C2 & C5).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import jax
+import numpy as np
+from jax import export as jexport
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> Dict:
+    root: Dict = {}
+    for key in sorted(flat):
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = flat[key]
+    return root
+
+
+class Runtime:
+    """Minimal execution provider: load → run.  No model code, no network."""
+
+    def __init__(self, artifact_dir: str):
+        self.dir = artifact_dir
+        with open(os.path.join(artifact_dir, "manifest.json")) as f:
+            self.manifest = json.load(f)
+        with open(os.path.join(artifact_dir, "model.bin"), "rb") as f:
+            self._exported = jexport.deserialize(bytearray(f.read()))
+        data = np.load(os.path.join(artifact_dir, "params.npz"))
+        self._params = _nest({k: data[k] for k in data.files})
+        self._call = jax.jit(self._exported.call)
+
+    @property
+    def input_signature(self) -> List[dict]:
+        return self.manifest["signature"]["inputs"]
+
+    def run(self, *inputs: np.ndarray) -> np.ndarray:
+        """Execute the graph: run(tokens[, ages]) -> logits (numpy)."""
+        out = self._call(self._params, *[np.asarray(x) for x in inputs])
+        return np.asarray(out)

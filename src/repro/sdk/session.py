@@ -1,0 +1,120 @@
+"""InferenceSession — the paper's JavaScript SDK, mirrored in NumPy.
+
+The JS SDK's responsibilities (paper §Methods) map one-to-one:
+
+  loading            -> ``InferenceSession(artifact_dir)`` (Runtime inside)
+  tensor creation    -> ``_make_inputs`` (pad to the graph's fixed axes)
+  execution          -> ``get_logits`` (alias ``getLogits``)
+  post-processing    -> ``generate_trajectory`` (alias ``generateTrajectory``)
+                        — eq. 1 sampling in *host* NumPy, outside the graph,
+                        exactly where the browser SDK samples in JS.
+
+Termination defaults match the paper: Death token, max age 85 — both
+overridable by the SDK user.  ``uniforms`` can be injected for bit-parity
+tests against the in-graph sampler (claims C2/C3).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sdk.runtime import Runtime
+
+
+class InferenceSession:
+    def __init__(self, artifact_dir: str):
+        self.runtime = Runtime(artifact_dir)
+        m = self.runtime.manifest
+        self.seq_len = int(m["signature"]["inputs"][0]["shape"][1])
+        self.vocab_size = int(m["signature"]["outputs"][0]["shape"][2])
+        self.has_ages = any(i["name"] == "ages"
+                            for i in m["signature"]["inputs"])
+        samp = m.get("sampling", {}).get("termination", {})
+        self.death_token = int(samp.get("death_token", 1))
+        self.max_age = float(samp.get("max_age_years", 85.0))
+
+    # -- tensor creation ------------------------------------------------------
+    def _make_inputs(self, tokens: Sequence[int],
+                     ages: Optional[Sequence[float]]):
+        S = self.seq_len
+        if len(tokens) > S:
+            raise ValueError(f"trajectory longer than graph axis ({S})")
+        t = np.zeros((1, S), np.int32)
+        t[0, :len(tokens)] = tokens
+        if not self.has_ages:
+            return (t,)
+        a = np.zeros((1, S), np.float32)
+        a[0, :len(ages)] = ages
+        if len(ages):
+            a[0, len(ages):] = ages[-1]
+        return t, a
+
+    # -- execution ------------------------------------------------------------
+    def get_logits(self, tokens: Sequence[int],
+                   ages: Optional[Sequence[float]] = None) -> np.ndarray:
+        """Logits for the *next* event given the trajectory so far: (V,)."""
+        inputs = self._make_inputs(tokens, ages)
+        logits = self.runtime.run(*inputs)          # (1, S, V)
+        return logits[0, len(tokens) - 1]
+
+    getLogits = get_logits                           # paper SDK naming
+
+    # -- post-processing (eq. 1 sampling, host-side) ---------------------------
+    def generate_trajectory(self, tokens: Sequence[int],
+                            ages: Sequence[float], *,
+                            max_new: int = 64,
+                            max_age: Optional[float] = None,
+                            death_token: Optional[int] = None,
+                            rng: Optional[np.random.Generator] = None,
+                            uniforms: Optional[np.ndarray] = None
+                            ) -> Dict[str, List]:
+        """Iterative client-side generation (the App's right-hand panel)."""
+        max_age = self.max_age if max_age is None else max_age
+        death = self.death_token if death_token is None else death_token
+        rng = rng or np.random.default_rng(0)
+        toks = list(tokens)
+        ags = [float(a) for a in ages]
+        new_toks: List[int] = []
+        new_ages: List[float] = []
+        for i in range(max_new):
+            if len(toks) >= self.seq_len:
+                break
+            logits = self.get_logits(toks, ags).astype(np.float64)
+            u = (uniforms[i] if uniforms is not None
+                 else rng.uniform(size=self.vocab_size))
+            u = np.clip(u, 1e-12, 1 - 1e-12)
+            t = -np.exp(-logits) * np.log(u)        # paper eq. 1
+            evt = int(np.argmin(t))
+            t_min = float(t[evt])
+            age = ags[-1] + t_min
+            if age > max_age:
+                break
+            toks.append(evt)
+            ags.append(age)
+            new_toks.append(evt)
+            new_ages.append(age)
+            if evt == death:
+                break
+        return {"tokens": new_toks, "ages": new_ages,
+                "full_tokens": toks, "full_ages": ags}
+
+    generateTrajectory = generate_trajectory         # paper SDK naming
+
+    # -- morbidity-risk estimates (the App's displayed output) -----------------
+    def estimate_risk(self, tokens: Sequence[int], ages: Sequence[float], *,
+                      horizon: float = 5.0, top: int = 10) -> List[dict]:
+        """Closed-form within-horizon next-event risks, client-side.
+
+        P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
+        Returns the ``top`` risks as {token, risk} dicts, highest first.
+        """
+        logits = self.get_logits(tokens, ages).astype(np.float64)
+        log_rate = np.logaddexp.reduce(logits)
+        frac = np.exp(logits - log_rate)
+        p_any = 1.0 - np.exp(-np.exp(log_rate) * horizon)
+        risk = frac * p_any
+        order = np.argsort(-risk)[:top]
+        return [{"token": int(i), "risk": float(risk[i])} for i in order]
+
+    estimateRisk = estimate_risk

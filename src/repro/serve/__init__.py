@@ -1,0 +1,4 @@
+"""Serving substrate: batched engine with slot continuous batching."""
+from repro.serve.engine import BatchedEngine, Request
+
+__all__ = ["BatchedEngine", "Request"]

@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, steps, loop, checkpointing."""
+from repro.train.checkpoint import load_config, restore, save
+from repro.train.optimizer import (OptimizerConfig, adamw_update, cosine_lr,
+                                   global_norm, init_opt_state)
+from repro.train.trainer import (lm_loss, make_eval_step, make_loss_fn,
+                                 make_train_step, train_loop)
+
+__all__ = ["load_config", "restore", "save", "OptimizerConfig",
+           "adamw_update", "cosine_lr", "global_norm", "init_opt_state",
+           "lm_loss", "make_eval_step", "make_loss_fn", "make_train_step",
+           "train_loop"]

@@ -1,0 +1,60 @@
+"""Checkpointing: pytree <-> npz + json treedef (no external deps).
+
+Array leaves are stored in a single ``.npz`` keyed by flattened path; the
+config is stored as JSON alongside.  ``save``/``restore`` round-trip exactly
+(dtype- and shape-preserving), which the SDK export also relies on for
+parameter shipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _flatten(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, cfg: ModelConfig | None = None,
+         extra: Dict[str, Any] | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    meta = {"extra": extra or {}}
+    if cfg is not None:
+        meta["config"] = dataclasses.asdict(cfg)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, params_template) -> Any:
+    """Restore into the structure of ``params_template`` (e.g. from
+    ``init_params`` under ``jax.eval_shape``)."""
+    data = np.load(os.path.join(path, "params.npz"))
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(params_template)
+    out = []
+    for path_k, leaf in leaves_p:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_k)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_config(path: str) -> Tuple[ModelConfig, Dict[str, Any]]:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    cfg = ModelConfig(**{k: v for k, v in meta["config"].items()})
+    return cfg, meta.get("extra", {})

@@ -1,0 +1,82 @@
+"""AdamW + cosine schedule + global-norm clipping on raw pytrees.
+
+No optax in this environment; this is the nanoGPT/llama recipe implemented
+directly.  Optimizer state is {mu, nu, step}; master params stay in
+``cfg.param_dtype`` (fp32) and moments in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_lr(ocfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = ocfg.lr * step / max(ocfg.warmup_steps, 1)
+    t = jnp.clip((step - ocfg.warmup_steps)
+                 / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = ocfg.lr * (ocfg.min_lr_ratio
+                     + (1 - ocfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < ocfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Weight-decay matrices only (no norms / biases / scalars) — nanoGPT rule."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return not any(s in name for s in ("scale", "bias", "b_fc", "b_proj",
+                                       "bq", "bk", "bv", "A_log", "dt_bias", "D"))
+
+
+def adamw_update(grads, opt_state, params, ocfg: OptimizerConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    lr = cosine_lr(ocfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: ocfg.b1 * m + (1 - ocfg.b1) * g, opt_state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: ocfg.b2 * v + (1 - ocfg.b2) * jnp.square(g),
+        opt_state["nu"], grads)
+    bc1 = 1 - ocfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - ocfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + ocfg.eps)
+        if _decay_mask(path):
+            u = u + ocfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,105 @@
+"""Training steps and loop.
+
+Two objectives share one step factory:
+* ``objective="delphi"`` — the paper's dual loss over (tokens, ages, targets,
+  target_dt, loss_mask) batches.
+* ``objective="lm"``     — next-token CE (+ MoE aux) for the assigned
+  architecture zoo; this is the function the train_4k dry-run shapes lower.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` directly
+or for ``jax.jit(..., in_shardings=..)`` by the multi-pod launcher.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import losses as losses_lib
+from repro.core.delphi import loss_fn as delphi_loss_fn
+from repro.models import forward
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            moe_impl: str = "dense_scan") -> Dict[str, jax.Array]:
+    """Next-token CE over the text stream (frontend tokens excluded)."""
+    out = forward(params, cfg, batch, mode="train", moe_impl=moe_impl)
+    logits = out["logits"]
+    off = out["text_offset"]
+    if off:
+        logits = logits[:, off:]
+    tokens = batch["tokens"]
+    ce = losses_lib.event_ce(logits[:, :-1], tokens[:, 1:])
+    loss = jnp.mean(ce)
+    total = loss + cfg.router_aux_coef * out["aux_loss"]
+    return {"loss": total, "event_ce": loss, "aux_loss": out["aux_loss"]}
+
+
+def make_loss_fn(cfg: ModelConfig, objective: str = "lm", *,
+                 moe_impl: str = "dense_scan") -> Callable:
+    if objective == "delphi":
+        return lambda p, b: delphi_loss_fn(p, cfg, b)
+    return lambda p, b: lm_loss(p, cfg, b, moe_impl=moe_impl)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    objective: str = "lm", *, moe_impl: str = "dense_scan"
+                    ) -> Callable:
+    loss_fn = make_loss_fn(cfg, objective, moe_impl=moe_impl)
+
+    def train_step(params, opt_state, batch):
+        def scalar_loss(p):
+            m = loss_fn(p, batch)
+            return m["loss"], m
+        grads, metrics = jax.grad(scalar_loss, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, ocfg)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, objective: str = "lm") -> Callable:
+    loss_fn = make_loss_fn(cfg, objective)
+    return lambda params, batch: loss_fn(params, batch)
+
+
+def train_loop(params, cfg: ModelConfig, ocfg: OptimizerConfig,
+               train_iter: Iterator[Dict[str, Any]], *,
+               objective: str = "delphi", steps: int = 200,
+               eval_iter: Optional[Iterator[Dict[str, Any]]] = None,
+               eval_every: int = 50, log_every: int = 10,
+               log_fn: Callable[[str], None] = print
+               ) -> Tuple[Any, Dict[str, list]]:
+    """Single-host training loop (examples / quickstart).  Returns
+    (trained params, history)."""
+    step_fn = jax.jit(make_train_step(cfg, ocfg, objective))
+    eval_fn = jax.jit(make_eval_step(cfg, objective))
+    opt_state = init_opt_state(params)
+    hist = {"step": [], "loss": [], "event_ce": [], "time_nll": [],
+            "val_loss": [], "val_step": []}
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(train_iter).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            hist["step"].append(i)
+            hist["loss"].append(float(m["loss"]))
+            hist["event_ce"].append(float(m["event_ce"]))
+            hist["time_nll"].append(float(m.get("time_nll", jnp.nan)))
+            log_fn(f"step {i:4d} loss {m['loss']:.4f} ce {m['event_ce']:.4f}"
+                   f" time_nll {float(m.get('time_nll', jnp.nan)):.4f}"
+                   f" lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f}"
+                   f" ({time.time() - t0:.1f}s)")
+        if eval_iter is not None and (i + 1) % eval_every == 0:
+            vb = {k: jnp.asarray(v) for k, v in next(eval_iter).items()}
+            vm = eval_fn(params, vb)
+            hist["val_loss"].append(float(vm["loss"]))
+            hist["val_step"].append(i)
+            log_fn(f"  eval step {i:4d} val_loss {vm['loss']:.4f}")
+    return params, hist

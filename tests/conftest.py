@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the 512-device override lives ONLY
+# in dryrun.py).  fp32 everywhere for tight tolerances.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    return cfg.replace(dtype="float32")

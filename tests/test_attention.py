@@ -1,0 +1,136 @@
+"""Attention: chunked-flash vs naive, ring caches, GQA, sliding window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models.attention import (LayerCache, cache_from_prefill,
+                                    cache_write, chunked_attention,
+                                    decode_attention, empty_cache)
+
+
+def _mk(key, B, Hq, Hkv, S, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,window,qb,kb", [
+    (64, None, 512, 512),       # direct small path
+    (700, None, 128, 128),      # chunked path with padding
+    (700, 100, 128, 128),       # sliding window chunked
+    (256, 32, 512, 512),        # sliding window direct
+])
+def test_chunked_vs_ref(key, S, window, qb, kb):
+    B, Hq, Hkv, hd = 2, 4, 2, 32
+    q, k, v = _mk(key, B, Hq, Hkv, S, hd)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = chunked_attention(q, k, v, pos, pos, causal=True, window=window,
+                            q_block=qb, kv_block=kb, q_per_kv=2)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True, window=window)
+    np.testing.assert_allclose(out, r.transpose(0, 2, 1, 3), atol=2e-5)
+
+
+def test_bidirectional(key):
+    B, H, S, hd = 2, 2, 256, 16
+    q, k, v = _mk(key, B, H, H, S, hd)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = chunked_attention(q, k, v, pos, pos, causal=False, window=None,
+                            q_block=128, kv_block=128)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=False)
+    np.testing.assert_allclose(out, r.transpose(0, 2, 1, 3), atol=2e-5)
+
+
+def test_ring_cache_prefill_layout(key):
+    B, Hkv, hd, S, W = 1, 2, 8, 10, 4
+    k = jnp.arange(B * S * Hkv * hd, dtype=jnp.float32).reshape(B, S, Hkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    c = cache_from_prefill(k, k, pos, W)
+    # slot j holds the latest token with position % W == j
+    assert c.pos[0].tolist() == [8, 9, 6, 7]
+    np.testing.assert_array_equal(c.k[0, :, 0], k[0, 8])
+
+
+def test_ring_cache_write_and_evict(key):
+    B, Hkv, hd, W = 1, 1, 4, 3
+    c = empty_cache_like(B, Hkv, W, hd)
+    for step in range(5):
+        kv = jnp.full((B, 1, Hkv, hd), float(step))
+        c = cache_write(c, kv, kv, jnp.int32(step))
+    assert sorted(c.pos[0].tolist()) == [2, 3, 4]
+
+
+def empty_cache_like(B, Hkv, W, hd):
+    return LayerCache(k=jnp.zeros((B, Hkv, W, hd)),
+                      v=jnp.zeros((B, Hkv, W, hd)),
+                      pos=jnp.full((B, W), -1, jnp.int32))
+
+
+def test_swa_ring_equals_full_window(key):
+    """Decoding with an SWA ring of width W must equal full attention
+    restricted to the last W tokens."""
+    B, Hkv, hd, S, W = 2, 2, 16, 29, 8
+    ks = jax.random.split(key, 4)
+    k_all = jax.random.normal(ks[0], (B, S + 1, Hkv, hd))
+    v_all = jax.random.normal(ks[1], (B, S + 1, Hkv, hd))
+    q = jax.random.normal(ks[2], (B, 1, Hkv, hd))
+
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ring = cache_from_prefill(k_all[:, :S], v_all[:, :S], pos, W)
+    ring = cache_write(ring, k_all[:, S:], v_all[:, S:], jnp.int32(S))
+    o_ring = decode_attention(q, ring, jnp.int32(S), window=W, q_per_kv=1)
+
+    # reference: naive attention of q over the last W tokens (all visible to
+    # the newest query, so no causal mask on the 1-token query)
+    ctx_k = k_all[:, S - W + 1:].transpose(0, 2, 1, 3)
+    ctx_v = v_all[:, S - W + 1:].transpose(0, 2, 1, 3)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), ctx_k, ctx_v, causal=False)
+    np.testing.assert_allclose(o_ring[:, 0], r[:, :, 0], atol=2e-5)
+
+
+def test_unrolled_attention_matches_scanned(key):
+    """The straight-line cost-accounting twin is numerically identical."""
+    B, Hq, Hkv, S, hd = 2, 4, 2, 300, 32
+    q, k, v = _mk(key, B, Hq, Hkv, S, hd)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                          q_block=128, kv_block=128, q_per_kv=2)
+    b = chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                          q_block=128, kv_block=128, q_per_kv=2, unroll=True)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_seq_shard_attention_flag_noop_on_host(key):
+    """cfg.seq_shard_attn only adds sharding constraints — outputs equal."""
+    from repro.configs import get_config
+    from repro.models import forward, init_params
+    from repro.launch.mesh import make_host_mesh
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(dtype="float32")
+    p = init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    y0 = forward(p, cfg, {"tokens": tokens}, mode="train")["logits"]
+    with make_host_mesh():
+        y1 = forward(p, cfg.replace(seq_shard_attn=True),
+                     {"tokens": tokens}, mode="train")["logits"]
+    np.testing.assert_allclose(y0, y1, atol=1e-5)
+
+
+def test_deferred_write_matches_inline(key):
+    B, Hkv, hd, S, W = 2, 2, 16, 12, 16
+    ks = jax.random.split(key, 4)
+    k_all = jax.random.normal(ks[0], (B, S + 1, Hkv, hd))
+    v_all = jax.random.normal(ks[1], (B, S + 1, Hkv, hd))
+    q = jax.random.normal(ks[2], (B, 1, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = cache_from_prefill(k_all[:, :S], v_all[:, :S], pos, W)
+
+    inline = cache_write(cache, k_all[:, S:], v_all[:, S:], jnp.int32(S))
+    o_inline = decode_attention(q, inline, jnp.int32(S), window=None)
+    o_defer = decode_attention(q, cache, jnp.int32(S), window=None,
+                               k_new=k_all[:, S:], v_new=v_all[:, S:])
+    np.testing.assert_allclose(o_inline, o_defer, atol=1e-5)

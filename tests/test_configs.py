@@ -1,0 +1,72 @@
+"""Config registry: assigned specs are exact; reduced variants obey bounds."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_assigned_spec_exact(arch):
+    c = get_config(arch)
+    exp = EXPECTED[arch]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == exp
+    assert c.citation
+
+
+def test_assignment_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(INPUT_SHAPES) == 4
+    assert {s.name for s in INPUT_SHAPES} == {
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"}
+
+
+def test_arch_details():
+    q = get_config("qwen2.5-32b")
+    assert q.qkv_bias
+    assert get_config("h2o-danube-1.8b").sliding_window == 4096
+    moe = get_config("qwen2-moe-a2.7b")
+    assert (moe.n_experts, moe.top_k, moe.n_shared_experts) == (60, 4, 4)
+    ol = get_config("olmoe-1b-7b")
+    assert (ol.n_experts, ol.top_k) == (64, 8)
+    m = get_config("mamba2-780m")
+    assert m.ssm_state == 128 and m.is_attention_free
+    z = get_config("zamba2-1.2b")
+    assert z.ssm_state == 64 and z.attn_every == 6
+    s = get_config("seamless-m4t-large-v2")
+    assert s.n_encoder_layers == 24 and s.frontend == "audio_frames"
+    v = get_config("internvl2-26b")
+    assert v.frontend == "vision_patches"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_bounds(arch):
+    r = get_config(arch, reduced=True)
+    full = get_config(arch)
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    if full.n_experts:
+        assert r.n_experts <= 4
+    assert r.arch_type == full.arch_type          # same family
+    if full.n_heads:
+        assert r.n_heads % r.n_kv_heads == 0
+
+
+def test_sliding_window_variant():
+    c = get_config("qwen2.5-32b")
+    assert c.sliding_window is None
+    cw = c.with_sliding_window(8192)
+    assert cw.sliding_window == 8192 and c.sliding_window is None

@@ -1,0 +1,77 @@
+"""Validation of the §Roofline cost-accounting methodology.
+
+The dry-run extrapolates FLOP/byte/collective counts linearly over depth from
+straight-line twins at depth 1 and 2 (EXPERIMENTS.md §Dry-run/Method).  Here
+we verify, on the host mesh with reduced configs, that the extrapolation
+reproduces a *fully unrolled* depth-L compile to ~1% — the residual being
+XLA fusion across layer boundaries (slightly different CSE at different
+depths) — for the homogeneous, hybrid (periodic shared-attention), and
+encoder-decoder stack laws.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import InputShape
+from repro.launch.dryrun import _count_one, _extrapolated_counts
+from repro.launch.mesh import make_host_mesh
+
+SMALL = InputShape("small_train", 64, 2, "train")
+SMALL_DECODE = InputShape("small_decode", 64, 2, "decode")
+
+
+def _full_unrolled(cfg, shape, mesh):
+    return _count_one(cfg.replace(unroll_layers=True, attn_direct=True),
+                      shape, mesh)
+
+
+@pytest.mark.parametrize("arch,L", [("tinyllama-1.1b", 4), ("mamba2-780m", 4)])
+def test_extrapolation_matches_full_unroll_homogeneous(arch, L):
+    mesh = make_host_mesh()
+    cfg = get_config(arch, reduced=True).replace(n_layers=L, remat=False)
+    got = _extrapolated_counts(cfg, SMALL, mesh)
+    want = _full_unrolled(cfg, SMALL, mesh)
+    np.testing.assert_allclose(got["flops"], want["flops"], rtol=0.05)
+    np.testing.assert_allclose(got["bytes"], want["bytes"], rtol=0.05)
+
+
+def test_extrapolation_matches_full_unroll_hybrid():
+    mesh = make_host_mesh()
+    # attn_every=2, L=5 -> 3 shared-attn applications, 5 mamba layers
+    cfg = get_config("zamba2-1.2b", reduced=True).replace(
+        n_layers=5, attn_every=2, remat=False)
+    got = _extrapolated_counts(cfg, SMALL, mesh)
+    want = _full_unrolled(cfg, SMALL, mesh)
+    np.testing.assert_allclose(got["flops"], want["flops"], rtol=0.05)
+    np.testing.assert_allclose(got["bytes"], want["bytes"], rtol=0.05)
+
+
+def test_extrapolation_matches_full_unroll_encdec():
+    mesh = make_host_mesh()
+    cfg = get_config("seamless-m4t-large-v2", reduced=True).replace(
+        n_layers=3, n_encoder_layers=4, remat=False)
+    got = _extrapolated_counts(cfg, SMALL, mesh)
+    want = _full_unrolled(cfg, SMALL, mesh)
+    np.testing.assert_allclose(got["flops"], want["flops"], rtol=0.05)
+    np.testing.assert_allclose(got["bytes"], want["bytes"], rtol=0.05)
+
+
+def test_extrapolation_decode_mode():
+    mesh = make_host_mesh()
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(n_layers=3)
+    got = _extrapolated_counts(cfg, SMALL_DECODE, mesh)
+    want = _full_unrolled(cfg, SMALL_DECODE, mesh)
+    np.testing.assert_allclose(got["flops"], want["flops"], rtol=0.05)
+
+
+def test_unrolled_twin_counts_exceed_scanned():
+    """The scanned deployment graph undercounts loops — the reason the twin
+    exists.  At L=4 the straight-line FLOPs must be substantially larger."""
+    mesh = make_host_mesh()
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+        n_layers=4, remat=False)
+    scanned = _count_one(cfg, SMALL, mesh)
+    unrolled = _full_unrolled(cfg, SMALL, mesh)
+    assert unrolled["flops"] > 1.5 * scanned["flops"]

@@ -1,0 +1,92 @@
+"""Synthetic simulator + pipeline invariants (hypothesis where meaningful)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.data import (SimulatorConfig, batches, dataset_stats,
+                        generate_dataset, pack_trajectories)
+from repro.data import vocab as V
+from repro.data.synthetic import _hazard_params, simulate_patient
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return generate_dataset(SimulatorConfig(n_train=80, n_val=20, seed=3))
+
+
+def test_deterministic(small_ds):
+    tr2, _ = generate_dataset(SimulatorConfig(n_train=80, n_val=20, seed=3))
+    t0, a0 = small_ds[0][0]
+    t1, a1 = tr2[0]
+    np.testing.assert_array_equal(t0, t1)
+    np.testing.assert_array_equal(a0, a1)
+
+
+def test_trajectory_invariants(small_ds):
+    train, _ = small_ds
+    for tok, age in train:
+        assert tok[0] in (V.SEX_FEMALE, V.SEX_MALE)
+        assert age[0] == 0.0
+        assert np.all(np.diff(age) >= 0)                  # ages non-decreasing
+        assert np.all(age <= 85.0 + 1e-5)
+        if V.DEATH in tok:
+            assert tok[-1] == V.DEATH                     # death is terminal
+        dis = tok[tok >= V.DISEASE0]
+        assert len(np.unique(dis)) == len(dis)            # first-occurrence
+        assert np.all(tok < V.VOCAB_SIZE) and np.all(tok >= 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_patient_invariants_property(seed):
+    rng = np.random.default_rng(seed)
+    cfg = SimulatorConfig()
+    a, b, partners, boosts = _hazard_params(rng, cfg)
+    tok, age = simulate_patient(rng, a, b, partners, boosts, cfg)
+    assert len(tok) == len(age)
+    assert np.all(np.diff(age) >= 0)
+    assert (tok == V.DEATH).sum() <= 1
+
+
+def test_pack_shapes_and_mask(small_ds):
+    train, _ = small_ds
+    S = 64
+    p = pack_trajectories(train, S)
+    n = len(train)
+    for k in ("tokens", "ages", "targets", "target_dt", "loss_mask"):
+        assert p[k].shape == (n, S)
+    # mask excludes PAD and NO_EVENT targets
+    masked = p["targets"][p["loss_mask"] > 0]
+    assert not np.isin(masked, [V.PAD, V.NO_EVENT]).any()
+    # dt strictly positive where supervised
+    assert np.all(p["target_dt"][p["loss_mask"] > 0] > 0)
+    # targets are the shifted tokens where supervised
+    i, j = np.nonzero(p["loss_mask"])
+    np.testing.assert_array_equal(p["targets"][i, j], p["tokens"][i, j + 1])
+
+
+def test_batches_iterator(small_ds):
+    train, _ = small_ds
+    p = pack_trajectories(train, 32)
+    it = batches(p, 16, seed=0, epochs=1)
+    seen = 0
+    for b in it:
+        assert b["tokens"].shape == (16, 32)
+        seen += 1
+    assert seen == len(train) // 16
+
+
+def test_stats(small_ds):
+    train, _ = small_ds
+    s = dataset_stats(train)
+    assert 0.3 < s["death_frac"] <= 1.0
+    assert 40 < s["mean_last_age"] < 85
+    assert s["mean_diseases"] > 3
+
+
+def test_vocab_names():
+    assert V.code_name(V.DEATH) == "Death"
+    assert V.code_name(V.DISEASE0).startswith("A")
+    assert V.code_name(V.VOCAB_SIZE - 1).startswith("Z")
+    assert len(V.all_names()) == V.VOCAB_SIZE == 1289

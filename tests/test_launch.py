@@ -1,0 +1,122 @@
+"""Launch-layer pure logic: HLO collective parsing, depth-extrapolation
+algebra, roofline math, input-spec construction (no 512-device mesh here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import _diff, _lin, _shape_bytes, collective_bytes
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, active_params,
+                                   analyse, model_flops, terms)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,1024]") == 128 * 1024 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("pred[7]") == 7
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_collective_parsing():
+    hlo = """
+  %all-reduce = f32[128,64] all-reduce(%x), replica_groups=[2,4]<=[8]
+  %ag = bf16[256] all-gather(%y), dimensions={0}
+  %rs.1 = (f32[16], f32[16]) reduce-scatter(%a, %b), to_apply=%sum
+  %cp = u32[4] collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a-start = f32[32,32] all-to-all-start(%w)
+  %not-a-collective = f32[9] add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 64 * 4
+    assert out["all-gather"] == 256 * 2
+    assert out["reduce-scatter"] == 2 * 16 * 4
+    assert out["collective-permute"] == 16
+    assert out["all-to-all"] == 32 * 32 * 4
+    assert sum(out.values()) == 128 * 64 * 4 + 512 + 128 + 16 + 4096
+
+
+def test_extrapolation_algebra():
+    a = {"flops": 10.0, "bytes": 100.0, "collectives": {"all-reduce": 5}}
+    b = {"flops": 16.0, "bytes": 130.0, "collectives": {"all-reduce": 8,
+                                                        "all-gather": 2}}
+    d = _diff(b, a)
+    assert d == {"flops": 6.0, "bytes": 30.0,
+                 "collectives": {"all-reduce": 3, "all-gather": 2}}
+    # a + (L-1)*d for L=4
+    out = _lin(a, d, 3)
+    assert out["flops"] == 28.0 and out["bytes"] == 190.0
+    assert out["collectives"] == {"all-reduce": 14, "all-gather": 6}
+
+
+def _fake_rec(**kw):
+    rec = {"arch": "tinyllama-1.1b", "shape": "train_4k", "mesh": "16x16",
+           "n_chips": 256, "mode": "train", "seq_len": 4096,
+           "global_batch": 256, "flops_per_device": 1e15,
+           "bytes_per_device": 1e13, "collective_total": 1e10,
+           "memory": {"peak_estimate_bytes": 2 ** 34}}
+    rec.update(kw)
+    return rec
+
+
+def test_roofline_terms():
+    t = terms(_fake_rec())
+    np.testing.assert_allclose(t["compute_s"], 1e15 / PEAK_FLOPS)
+    np.testing.assert_allclose(t["memory_s"], 1e13 / HBM_BW)
+    np.testing.assert_allclose(t["collective_s"], 1e10 / ICI_BW)
+    assert t["dominant"] == "memory"
+    t2 = terms(_fake_rec(collective_total=1e13))
+    assert t2["dominant"] == "collective"
+
+
+def test_model_flops_conventions():
+    cfg = get_config("tinyllama-1.1b")
+    n = active_params(cfg)
+    assert 0.9e9 < n < 1.4e9          # ~1.1B
+    rec = _fake_rec()
+    assert model_flops(cfg, rec) == pytest.approx(6 * n * 4096 * 256)
+    rec_d = _fake_rec(mode="decode", global_batch=128)
+    assert model_flops(cfg, rec_d) == pytest.approx(2 * n * 128)
+
+
+def test_active_params_moe_counts_topk_only():
+    moe = get_config("olmoe-1b-7b")
+    n_active = active_params(moe)
+    # olmoe: ~1B active of ~7B total
+    assert 0.7e9 < n_active < 1.8e9
+    q = get_config("qwen2.5-32b")
+    assert 28e9 < active_params(q) < 36e9
+
+
+def test_analyse_suggestion():
+    a = analyse(_fake_rec())
+    assert a["dominant"] == "memory"
+    assert "useful_ratio" in a and 0 < a["useful_ratio"] < 1
+    assert isinstance(a["suggestion"], str)
+
+
+def test_input_specs_host_mesh():
+    """Spec construction is mesh-size agnostic (host 1x1 mesh)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import input_specs
+    mesh = make_host_mesh()
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        shape = get_shape(shape_name)
+        args, shardings = input_specs(cfg, shape, mesh)
+        assert len(args) == len(shardings)
+        # every leaf is a ShapeDtypeStruct (no allocation)
+        for leaf in jax.tree_util.tree_leaves(args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long500k_policy():
+    from repro.launch.specs import long_context_cfg
+    qwen = get_config("qwen2.5-32b")
+    assert long_context_cfg(qwen, get_shape("long_500k")).sliding_window == 8192
+    assert long_context_cfg(qwen, get_shape("decode_32k")).sliding_window is None
+    mamba = get_config("mamba2-780m")
+    assert long_context_cfg(mamba, get_shape("long_500k")).sliding_window is None
+    danube = get_config("h2o-danube-1.8b")
+    assert long_context_cfg(danube, get_shape("long_500k")).sliding_window == 4096

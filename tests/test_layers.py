@@ -1,0 +1,69 @@
+"""Core layers: norms, RoPE relative property, age encoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.configs import get_config
+from repro.models.layers import (age_encoding, apply_norm, apply_rope,
+                                 init_norm)
+
+
+def test_rmsnorm_unit_rms(key):
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    p = init_norm(cfg, 64)
+    x = jax.random.normal(key, (3, 5, 64)) * 7 + 2
+    y = apply_norm(p, x, cfg)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_standardizes(key):
+    cfg = get_config("delphi-2m", reduced=True)   # layernorm family
+    p = init_norm(cfg, 64)
+    x = jax.random.normal(key, (3, 64)) * 7 + 2
+    y = apply_norm(p, x, cfg)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm(key):
+    x = jax.random.normal(key, (2, 6, 4, 32))
+    pos = jnp.arange(6, dtype=jnp.int32)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(0, 10_000))
+def test_rope_relative_property(shift):
+    """q·k after RoPE depends only on the position difference — the property
+    that makes ring-buffer caches at absolute offsets exact."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+    def dot_at(p0, p1):
+        qr = apply_rope(q, jnp.array([p0], jnp.int32), 1e4)
+        kr = apply_rope(k, jnp.array([p1], jnp.int32), 1e4)
+        return float(jnp.sum(qr * kr))
+    base = dot_at(7, 3)
+    shifted = dot_at(7 + shift, 3 + shift)
+    np.testing.assert_allclose(base, shifted, rtol=1e-3, atol=1e-4)
+
+
+def test_age_encoding_shape_and_distinct():
+    ages = jnp.array([[0.0, 10.0, 50.0, 50.001, 84.0]])
+    enc = age_encoding(ages, 120)
+    assert enc.shape == (1, 5, 120)
+    # distinct ages produce distinct encodings; close ages close encodings
+    d_far = float(jnp.linalg.norm(enc[0, 1] - enc[0, 2]))
+    d_near = float(jnp.linalg.norm(enc[0, 2] - enc[0, 3]))
+    assert d_far > d_near
+    assert bool(jnp.isfinite(enc).all())
+
+
+def test_age_encoding_bounded():
+    enc = age_encoding(jnp.linspace(0, 100, 50)[None], 64)
+    assert float(jnp.max(jnp.abs(enc))) <= 1.0 + 1e-6

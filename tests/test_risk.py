@@ -1,0 +1,80 @@
+"""Risk estimation + calibration harness (the App's displayed output)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.core.risk import (analytic_next_event_risk, disease_chapter_map,
+                             monte_carlo_risk, next_event_risk)
+
+
+@pytest.fixture(scope="module")
+def delphi():
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=1289)
+    params = init_delphi(cfg, jax.random.PRNGKey(2))
+    return params, cfg
+
+
+def test_analytic_risk_properties(key):
+    logits = jax.random.normal(key, (3, 50))
+    r = analytic_next_event_risk(logits, horizon=5.0)
+    assert r.shape == (3, 50)
+    assert float(jnp.min(r)) >= 0
+    total = jnp.sum(r, axis=-1)
+    assert float(jnp.max(total)) <= 1.0 + 1e-5
+    # monotone in horizon
+    r2 = analytic_next_event_risk(logits, horizon=10.0)
+    assert bool((r2 >= r - 1e-7).all())
+    # infinite horizon -> softmax
+    r_inf = analytic_next_event_risk(logits, horizon=1e9)
+    np.testing.assert_allclose(r_inf, jax.nn.softmax(logits, -1), atol=1e-5)
+
+
+def test_next_event_risk_shape(delphi, key):
+    params, cfg = delphi
+    tokens = jax.random.randint(key, (2, 8), 3, cfg.vocab_size)
+    ages = jnp.cumsum(jax.random.uniform(key, (2, 8), maxval=5.0), axis=1)
+    r = next_event_risk(params, cfg, tokens, ages, horizon=5.0)
+    assert r.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(r).all())
+
+
+def test_monte_carlo_risk(delphi, key):
+    params, cfg = delphi
+    tokens = jax.random.randint(key, (6,), 3, cfg.vocab_size)
+    ages = jnp.cumsum(jax.random.uniform(key, (6,), maxval=8.0))
+    ch = disease_chapter_map(cfg.vocab_size)
+    r = monte_carlo_risk(params, cfg, tokens, ages, jax.random.PRNGKey(1),
+                         horizon=10.0, n_samples=16, max_new=12,
+                         chapter_of=ch)
+    assert r["code_risk"].shape == (cfg.vocab_size,)
+    assert 0.0 <= float(r["death_risk"]) <= 1.0
+    assert r["chapter_risk"].shape[0] == 27
+    assert float(jnp.max(r["chapter_risk"])) <= 1.0 + 1e-6
+
+
+def test_sdk_estimate_risk(delphi, tmp_path):
+    params, cfg = delphi
+    from repro.sdk import InferenceSession, export_model
+    d = str(tmp_path / "art")
+    export_model(params, cfg.replace(max_seq_len=32), d)
+    sess = InferenceSession(d)
+    out = sess.estimateRisk([3, 40, 50], [0.0, 20.0, 33.0], horizon=5.0,
+                            top=5)
+    assert len(out) == 5
+    risks = [o["risk"] for o in out]
+    assert risks == sorted(risks, reverse=True)
+    assert all(0 <= r <= 1 for r in risks)
+
+
+def test_calibration_harness(delphi):
+    params, cfg = delphi
+    from repro.core.calibration import calibration_report, cohort_stats
+    from repro.data import SimulatorConfig, generate_dataset
+    held, _ = generate_dataset(SimulatorConfig(n_train=40, n_val=1, seed=9))
+    rep = calibration_report(params, cfg, held, n_batches=1)
+    assert 0.0 <= rep["chapter_l1"] <= 2.0
+    assert rep["data"]["events_per_year"] > 0

@@ -1,0 +1,106 @@
+"""Time-to-event sampler (paper eq. 1): distributional correctness,
+determinism, termination semantics (C3, C4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+
+from repro.configs import get_config
+from repro.core import (generate_trajectories, init_delphi,
+                        sample_next_event, sample_waiting_times)
+
+
+def test_argmin_is_softmax_categorical(key):
+    """P(argmin_i t_i = j) = softmax(logits)_j — the competing-exponential
+    property the paper's sampler relies on."""
+    logits = jnp.array([1.2, 0.0, -1.0, 2.0])
+    n = 40_000
+    u = jax.random.uniform(key, (n, 4))
+    evt, _ = sample_next_event(jnp.broadcast_to(logits, (n, 4)), u)
+    freq = np.bincount(np.asarray(evt), minlength=4) / n
+    np.testing.assert_allclose(freq, jax.nn.softmax(logits), atol=0.01)
+
+
+def test_tmin_is_exponential_total_rate(key):
+    """t_min ~ Exp(sum_i e^{logit_i}): check the mean."""
+    logits = jnp.array([0.5, 0.5, -0.5])
+    lam = float(jnp.sum(jnp.exp(logits)))
+    n = 40_000
+    u = jax.random.uniform(key, (n, 3))
+    _, tmin = sample_next_event(jnp.broadcast_to(logits, (n, 3)), u)
+    np.testing.assert_allclose(float(jnp.mean(tmin)), 1 / lam, rtol=0.05)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    logits=hnp.arrays(np.float32, (9,),
+                      elements=st.floats(-5, 5, width=32,
+                                         allow_subnormal=False)),
+    seed=st.integers(0, 2**20),
+)
+def test_deterministic_given_uniforms(logits, seed):
+    u = np.random.default_rng(seed).uniform(size=9).astype(np.float32)
+    e1, t1 = sample_next_event(jnp.asarray(logits)[None], jnp.asarray(u)[None])
+    e2, t2 = sample_next_event(jnp.asarray(logits)[None], jnp.asarray(u)[None])
+    assert int(e1[0]) == int(e2[0]) and float(t1[0]) == float(t2[0])
+    # the winner's candidate time equals t_min
+    t = sample_waiting_times(jnp.asarray(logits), jnp.asarray(u))
+    assert float(t1[0]) == float(t[int(e1[0])])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_monotonicity_in_logit(seed):
+    """Raising logit_j (with u fixed) can only shrink t_j — so it can only
+    make j more likely to win."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=7).astype(np.float32)
+    u = rng.uniform(size=7).astype(np.float32)
+    t0 = sample_waiting_times(jnp.asarray(logits), jnp.asarray(u))
+    logits2 = logits.copy()
+    logits2[3] += 1.0
+    t1 = sample_waiting_times(jnp.asarray(logits2), jnp.asarray(u))
+    assert float(t1[3]) <= float(t0[3])
+    mask = np.arange(7) != 3
+    np.testing.assert_allclose(np.asarray(t0)[mask], np.asarray(t1)[mask])
+
+
+@pytest.fixture(scope="module")
+def delphi():
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=64, death_token=1)
+    params = init_delphi(cfg, jax.random.PRNGKey(7))
+    return params, cfg
+
+
+def test_generation_termination_max_age(delphi, key):
+    params, cfg = delphi
+    B, S = 3, 8
+    tokens = jax.random.randint(key, (B, S), 3, cfg.vocab_size)
+    ages = jnp.cumsum(jax.random.uniform(key, (B, S), maxval=10.0), axis=1)
+    out = generate_trajectories(params, cfg, tokens, ages, key, max_new=32,
+                                max_age=cfg.max_age)
+    # ages never exceed max_age and are non-decreasing
+    assert float(jnp.max(out["ages"])) <= cfg.max_age + 1e-3
+    diffs = jnp.diff(out["ages"], axis=1)
+    assert float(jnp.min(diffs)) >= -1e-5
+
+
+def test_generation_stops_at_death(delphi, key):
+    params, cfg = delphi
+    B, S = 2, 4
+    tokens = jax.random.randint(key, (B, S), 3, cfg.vocab_size)
+    ages = jnp.cumsum(jax.random.uniform(key, (B, S), maxval=2.0), axis=1)
+    # rig uniforms so the death token always wins step 0: t = -e^-l ln(u),
+    # so u -> 1 makes t -> 0 (death wins) and u -> 0 makes t huge (others)
+    V = cfg.vocab_size
+    u = jnp.full((B, 16, V), 1e-30)
+    u = u.at[:, :, cfg.death_token].set(1.0 - 1e-9)
+    out = generate_trajectories(params, cfg, tokens, ages, key, max_new=16,
+                                uniforms=u)
+    assert out["n_generated"].tolist() == [1, 1]
+    assert out["tokens"][:, S].tolist() == [cfg.death_token] * B
+    assert not bool(out["alive_mask"][:, 1:].any())

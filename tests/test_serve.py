@@ -1,0 +1,58 @@
+"""Serving engine: slot continuous batching, termination, cache insertion."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import BatchedEngine, Request
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def _reqs(n, max_new=6):
+    out = []
+    for i in range(n):
+        S = 4 + (i % 3)
+        out.append(Request(tokens=np.arange(3, 3 + S, dtype=np.int32),
+                           ages=np.linspace(0, 30 + i, S).astype(np.float32),
+                           max_new=max_new))
+    return out
+
+
+def test_more_requests_than_slots(engine_setup):
+    params, cfg = engine_setup
+    eng = BatchedEngine(params, cfg, slots=3, max_context=64)
+    for r in _reqs(7):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 7
+    for r in done:
+        assert r.done and 1 <= len(r.out_tokens) <= 6
+        assert len(r.out_ages) == len(r.out_tokens)
+        assert all(b >= a - 1e-6 for a, b in zip(r.out_ages, r.out_ages[1:]))
+
+
+def test_max_new_respected(engine_setup):
+    params, cfg = engine_setup
+    eng = BatchedEngine(params, cfg, slots=2, max_context=64)
+    for r in _reqs(2, max_new=3):
+        eng.submit(r)
+    done = eng.run()
+    assert all(len(r.out_tokens) <= 3 for r in done)
+
+
+def test_lm_mode():
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = BatchedEngine(params, cfg, slots=2, max_context=48)
+    eng.submit(Request(tokens=np.arange(1, 9, dtype=np.int32), max_new=5))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 5
+    assert all(0 <= t < cfg.vocab_size for t in done[0].out_tokens)

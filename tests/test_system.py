@@ -1,0 +1,75 @@
+"""End-to-end behaviour: the paper's full pipeline on one CPU —
+simulate -> train (dual loss) -> export (FAIR artifact) -> client-side SDK
+generation -> batched serving.  Validates claims C1–C5 jointly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.data import (SimulatorConfig, batches, generate_dataset,
+                        pack_trajectories)
+from repro.data import vocab as V
+from repro.sdk import InferenceSession, export_model, verify_checksums
+from repro.serve import BatchedEngine, Request
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=1289, max_seq_len=48)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    train, _ = generate_dataset(SimulatorConfig(n_train=96, n_val=8, seed=1))
+    packed = pack_trajectories(train, 48)
+    it = batches(packed, 16, seed=0)
+    step = jax.jit(make_train_step(
+        cfg, OptimizerConfig(lr=2e-3, warmup_steps=5, total_steps=40),
+        "delphi"))
+    opt = init_opt_state(params)
+    first = last = None
+    for i in range(40):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, b)
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    return cfg, params, first, last, train
+
+
+def test_c1_training_converges(trained):
+    _, _, first, last, _ = trained
+    assert last < first * 0.85
+
+
+def test_c2_c5_export_and_client_side_inference(trained, tmp_path):
+    cfg, params, _, _, train = trained
+    d = str(tmp_path / "artifact")
+    export_model(params, cfg, d)
+    assert verify_checksums(d)
+    sess = InferenceSession(d)
+    tok, age = train[0]
+    half = min(len(tok) // 2, 20)
+    out = sess.generate_trajectory(tok[:half].tolist(), age[:half].tolist(),
+                                   max_new=16)
+    assert 1 <= len(out["tokens"]) <= 16
+    # C4 semantics: ages monotone, capped at 85, death terminal
+    ages = out["full_ages"]
+    assert all(b >= a - 1e-6 for a, b in zip(ages, ages[1:]))
+    assert max(ages) <= 85.0
+    if V.DEATH in out["tokens"]:
+        assert out["tokens"][-1] == V.DEATH
+
+
+def test_batched_serving_on_trained_model(trained):
+    cfg, params, _, _, train = trained
+    eng = BatchedEngine(params, cfg, slots=4, max_context=96, seed=3)
+    for tok, age in train[:6]:
+        h = min(len(tok) // 2, 20)
+        eng.submit(Request(tokens=tok[:h], ages=age[:h], max_new=8))
+    done = eng.run()
+    assert len(done) == 6
+    gaps = [b - a for r in done
+            for a, b in zip([r.out_ages[0]] + r.out_ages[:-1], r.out_ages)]
+    assert np.isfinite(gaps).all()
