@@ -1,6 +1,8 @@
 """End-to-end serving driver (the mandated e2e example for a serving paper):
 train a small Delphi, then serve a stream of batched trajectory requests
-through the slot-based continuous-batching engine.
+through the device-resident continuous-batching engine — one jitted
+decode_and_sample step per tick, eq. 1 sampling in-graph, a single packed
+host transfer per tick, and bucketed-padding batched prefill on admission.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 24]
 """
@@ -50,7 +52,10 @@ def main():
     dt = time.time() - t0
     ev = sum(len(r.out_tokens) for r in done)
     print(f"   {len(done)} requests, {ev} events in {dt:.1f}s "
-          f"({ev/dt:.1f} events/s)")
+          f"({ev/dt:.1f} events/s, {eng.ticks/dt:.1f} ticks/s, "
+          f"{eng.host_syncs} host syncs over {eng.ticks} ticks + "
+          f"{eng.admit_batches} admissions, "
+          f"prefill shapes {sorted(eng.prefill_shapes)})")
 
     r = done[0]
     print("   sample continuation:")

@@ -5,7 +5,8 @@ from repro.core.delphi import get_logits, init_delphi, loss_fn
 from repro.core.losses import dual_loss, event_ce, joint_nll, time_nll
 from repro.core.risk import (analytic_next_event_risk, disease_chapter_map,
                              monte_carlo_risk, next_event_risk)
-from repro.core.sampler import (generate_trajectories,
+from repro.core.sampler import (advance_trajectory_state,
+                                generate_trajectories,
                                 generate_trajectories_jit,
                                 sample_next_event, sample_waiting_times)
 
@@ -15,6 +16,6 @@ __all__ = [
     "dual_loss", "event_ce", "joint_nll", "time_nll",
     "analytic_next_event_risk", "disease_chapter_map", "monte_carlo_risk",
     "next_event_risk",
-    "generate_trajectories", "generate_trajectories_jit",
-    "sample_next_event", "sample_waiting_times",
+    "advance_trajectory_state", "generate_trajectories",
+    "generate_trajectories_jit", "sample_next_event", "sample_waiting_times",
 ]

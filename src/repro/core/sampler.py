@@ -42,6 +42,35 @@ def sample_next_event(logits, u):
     return idx.astype(jnp.int32), tmin
 
 
+def advance_trajectory_state(evt, tmin, age, n_emitted, max_new, next_pos,
+                             active, *, max_age: float, death_token: int,
+                             max_context: int):
+    """Canonical per-step termination/emit semantics of the paper's sampler.
+
+    The single source of truth shared by the serving engine's in-graph tick
+    and (behaviourally) the SDK's host loop: an event whose waiting time
+    pushes age past ``max_age`` is *censored* — the trajectory ends BEFORE
+    the event is emitted (claim C2/C3 parity; ``InferenceSession.
+    generate_trajectory`` breaks before appending).  Death is emitted, then
+    terminates.  All inputs/outputs are (B,) arrays; ``next_pos`` is the
+    absolute position where each trajectory's next decode write would land.
+
+    Returns dict with ``evt`` (0 where not emitted), ``age``, ``emit``,
+    ``finished``, ``n_emitted``.
+    """
+    new_age = age + tmin
+    over = new_age > max_age
+    emit = active & ~over
+    evt = jnp.where(emit, evt, 0)
+    age_out = jnp.where(emit, new_age, age)
+    n_out = n_emitted + emit.astype(n_emitted.dtype)
+    ctx_full = next_pos + 1 >= max_context
+    finished = active & (over | (emit & (evt == death_token))
+                         | (n_out >= max_new) | ctx_full)
+    return {"evt": evt, "age": age_out, "emit": emit, "finished": finished,
+            "n_emitted": n_out}
+
+
 def generate_trajectories(params, cfg: ModelConfig, tokens, ages, rng, *,
                           max_new: int = 64, max_age: Optional[float] = None,
                           death_token: Optional[int] = None,

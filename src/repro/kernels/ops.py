@@ -59,12 +59,18 @@ def ssd_intra(xdt, Bm, Cm, cum, *, interpret: bool = True
 
 
 @functools.partial(jax.jit, static_argnames=("bv", "interpret"))
-def tte_sample(logits, u, *, bv: int = 2048, interpret: bool = True
+def tte_sample(logits, u, *, bv: int = 2048,
+               interpret: Optional[bool] = None
                ) -> Tuple[jax.Array, jax.Array]:
     """Fused competing-exponential sampler: (B, V) -> (event, t_min).
 
     Pads the vocab axis with neutral entries (rate ~ e^-100: never wins).
+    ``interpret=None`` resolves by backend: Mosaic lowering on TPU, the
+    Pallas interpreter elsewhere — so the serving engine's Pallas sampling
+    path is portable without call-site branching.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     V = logits.shape[1]
     b = min(bv, max(256, 1 << (V - 1).bit_length()))
     lp = _pad_axis(logits.astype(jnp.float32), 1, b, value=-100.0)

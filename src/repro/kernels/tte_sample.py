@@ -15,6 +15,11 @@ the running (min, argmin) pair which is written out on the last tile.
 Uniforms are an explicit input (threefry on device or host-provided), keeping
 the kernel deterministic and runtime-reproducible — the property the paper's
 cross-runtime parity story depends on.
+
+Tie-breaking matches ``jnp.argmin`` exactly (lowest index wins: strict ``<``
+across tiles, first-index argmin within a tile), so the serving engine can
+swap this kernel in for the jnp reference sampler (``sampler="pallas"``)
+without breaking bit-parity against the SDK (claims C2/C3).
 """
 from __future__ import annotations
 

@@ -183,7 +183,8 @@ def decode_attention(q, cache: LayerCache, step, *, window: Optional[int],
     """Single-token attention against a ring cache.
 
     q: (B, 1, Hq, hd) roped; cache.k/v: (B, Hkv, W, hd); step: scalar int32
-    (absolute position of the query token).
+    (absolute position of the query token) or (B,) per-example positions —
+    the batched serving engine decodes slots at different depths in one call.
 
     When ``k_new``/``v_new`` (B, 1, Hkv, hd) are given, the cache is treated
     as *read-only* and the new token is attended via an appended logit — the
@@ -195,6 +196,9 @@ def decode_attention(q, cache: LayerCache, step, *, window: Optional[int],
     Hkv, W = cache.k.shape[1], cache.k.shape[2]
     G = q_per_kv
     scale = hd ** -0.5
+    step = jnp.asarray(step)
+    if step.ndim == 1:
+        step = step.reshape(B, 1, 1, 1)   # broadcast against pos (B,1,1,W)
     qg = q.reshape(B, Hkv, G, hd)
     s = jnp.einsum("bhgd,bhwd->bhgw", qg, cache.k).astype(jnp.float32) * scale
     pos = cache.pos[:, None, None, :]
@@ -260,11 +264,28 @@ def cache_from_prefill(k, v, positions, width: int) -> LayerCache:
 
 
 def cache_write(cache: LayerCache, k_new, v_new, step) -> LayerCache:
-    """Write one token (B, 1, Hkv, hd) at absolute position ``step`` (scalar)."""
-    W = cache.k.shape[2]
-    slot = jnp.mod(step, W)
+    """Write one token (B, 1, Hkv, hd) at absolute position ``step``.
+
+    ``step`` may be a scalar (all examples at the same depth) or (B,)
+    per-example positions (the serving engine's continuous-batching slots)."""
+    step = jnp.asarray(step)
     k_t = k_new.transpose(0, 2, 1, 3)   # (B, Hkv, 1, hd)
     v_t = v_new.transpose(0, 2, 1, 3)
+    if step.ndim == 1:
+        def one(k, v, p, kt, vt, s):
+            # k: (Hkv, W, hd); p: (W,); kt/vt: (Hkv, 1, hd)
+            slot = jnp.mod(s, p.shape[0])
+            k = jax.lax.dynamic_update_slice_in_dim(
+                k, kt.astype(k.dtype), slot, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                v, vt.astype(v.dtype), slot, axis=1)
+            p = jax.lax.dynamic_update_slice(
+                p, s.astype(jnp.int32).reshape(1), (slot,))
+            return k, v, p
+        k, v, pos = jax.vmap(one)(cache.k, cache.v, cache.pos, k_t, v_t, step)
+        return LayerCache(k=k, v=v, pos=pos)
+    W = cache.k.shape[2]
+    slot = jnp.mod(step, W)
     k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t.astype(cache.k.dtype), slot, axis=2)
     v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t.astype(cache.v.dtype), slot, axis=2)
     pos = jax.lax.dynamic_update_slice_in_dim(
@@ -276,11 +297,30 @@ def cache_write_stacked(caches: LayerCache, k_news, v_news, step) -> LayerCache:
     """One scatter for the whole layer stack (the deferred decode write).
 
     caches: (L, B, Hkv, W, hd) leaves; k_news/v_news: (L, B, 1, Hkv, hd).
+    ``step`` scalar, or (B,) per-example positions (per-slot engine decode —
+    each example's write lands in its own ring slot).
     """
-    W = caches.k.shape[3]
-    slot = jnp.mod(step, W)
+    step = jnp.asarray(step)
     k_t = k_news.transpose(0, 1, 3, 2, 4)    # (L, B, Hkv, 1, hd)
     v_t = v_news.transpose(0, 1, 3, 2, 4)
+    if step.ndim == 1:
+        def one(k, v, p, kt, vt, s):
+            # k: (L, Hkv, W, hd); p: (L, W); kt/vt: (L, Hkv, 1, hd)
+            slot = jnp.mod(s, p.shape[1])
+            k = jax.lax.dynamic_update_slice_in_dim(
+                k, kt.astype(k.dtype), slot, axis=2)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                v, vt.astype(v.dtype), slot, axis=2)
+            p = jax.lax.dynamic_update_slice_in_dim(
+                p, jnp.broadcast_to(s.astype(jnp.int32), (p.shape[0], 1)),
+                slot, axis=1)
+            return k, v, p
+        k, v, pos = jax.vmap(one, in_axes=(1, 1, 1, 1, 1, 0),
+                             out_axes=(1, 1, 1))(
+            caches.k, caches.v, caches.pos, k_t, v_t, step)
+        return LayerCache(k=k, v=v, pos=pos)
+    W = caches.k.shape[3]
+    slot = jnp.mod(step, W)
     k = jax.lax.dynamic_update_slice_in_dim(caches.k, k_t.astype(caches.k.dtype),
                                             slot, axis=3)
     v = jax.lax.dynamic_update_slice_in_dim(caches.v, v_t.astype(caches.v.dtype),
@@ -326,7 +366,10 @@ def attention(params, x, positions, cfg: ModelConfig, *, mode: str,
             return out, cache
         q, k, v = _project_qkv(params, x, x, cfg)
         if use_rope:
-            pos1 = jnp.reshape(step, (1, 1))
+            st_arr = jnp.asarray(step)
+            # (1, 1) shared position, or (B, 1) per-example engine positions
+            pos1 = (st_arr.reshape(-1, 1) if st_arr.ndim == 1
+                    else jnp.reshape(st_arr, (1, 1)))
             q = apply_rope(q, pos1, cfg.rope_theta)
             k = apply_rope(k, pos1, cfg.rope_theta)
         if defer_write:

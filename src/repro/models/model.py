@@ -427,8 +427,15 @@ def _empty_hybrid_attn_cache(cfg: ModelConfig, batch: int, width: int, dtype):
 # ---------------------------------------------------------------------------
 def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
             mode: str = "train", cache_width: Optional[int] = None,
-            moe_impl: str = "dense_scan") -> Dict[str, Any]:
-    """mode in {"train", "prefill"}."""
+            moe_impl: str = "dense_scan",
+            last_index: Optional[Any] = None) -> Dict[str, Any]:
+    """mode in {"train", "prefill"}.
+
+    ``last_index`` (prefill only): (B,) int32 index of each example's last
+    *valid* token.  Right-padded batched prefill (the serving engine's
+    bucketed admission) reads its bootstrap logits there instead of at the
+    fixed position -1; padded tail positions never reach the logits head.
+    """
     assert mode in ("train", "prefill")
     t = cfg.arch_type
     x, pos, offset = _embed_input(params, cfg, batch)
@@ -473,7 +480,11 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     if mode == "prefill":
         # decode bootstrap only needs the last position; slicing before the
         # head keeps the (B, S, V) fp32 logits out of the live set
-        x = x[:, -1:]
+        if last_index is not None:
+            idx = jnp.asarray(last_index, jnp.int32) + offset
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        else:
+            x = x[:, -1:]
     x = apply_norm(params["final_norm"], x, cfg)
     out["logits"] = logits_head(params["embed"], x, cfg)
     out["aux_loss"] = aux
@@ -483,13 +494,16 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
 def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], step,
                 *, moe_impl: str = "dense_scan") -> Dict[str, Any]:
     """One-token decode.  batch["tokens"]: (B, 1); step: scalar int32 absolute
-    position of the new token.  Returns {"logits": (B, 1, V), "cache": ...}."""
+    position of the new token, or (B,) per-example positions — the serving
+    engine advances its continuous-batching slots, each at a different depth,
+    in one batched call.  Returns {"logits": (B, 1, V), "cache": ...}."""
     t = cfg.arch_type
     tokens = batch["tokens"]
     x = embed_tokens(params["embed"], tokens, cfg)
     if cfg.age_encoding:
         x = x + age_encoding(batch["ages"], cfg.d_model).astype(x.dtype)
-    pos = jnp.reshape(step, (1,)).astype(jnp.int32)
+    step = jnp.asarray(step, jnp.int32)
+    pos = step if step.ndim == 1 else jnp.reshape(step, (1,))
 
     if t in (cb.DENSE, cb.VLM, cb.MOE):
         x, caches, _, _ = _transformer_stack(

@@ -38,12 +38,20 @@ class InferenceSession:
     def _make_inputs(self, tokens: Sequence[int],
                      ages: Optional[Sequence[float]]):
         S = self.seq_len
+        if len(tokens) == 0:
+            raise ValueError("empty trajectory: pass at least one event token")
         if len(tokens) > S:
             raise ValueError(f"trajectory longer than graph axis ({S})")
         t = np.zeros((1, S), np.int32)
         t[0, :len(tokens)] = tokens
         if not self.has_ages:
             return (t,)
+        if ages is None:
+            raise ValueError("this artifact's signature declares an 'ages' "
+                             "input: pass ages alongside tokens")
+        if len(ages) != len(tokens):
+            raise ValueError(f"ages/tokens length mismatch: "
+                             f"{len(ages)} vs {len(tokens)}")
         a = np.zeros((1, S), np.float32)
         a[0, :len(ages)] = ages
         if len(ages):

@@ -1,4 +1,4 @@
 """Serving substrate: batched engine with slot continuous batching."""
-from repro.serve.engine import BatchedEngine, Request
+from repro.serve.engine import BatchedEngine, ReferenceEngine, Request
 
-__all__ = ["BatchedEngine", "Request"]
+__all__ = ["BatchedEngine", "ReferenceEngine", "Request"]

@@ -1,30 +1,55 @@
-"""Batched serving engine: prefill + decode with slot-based continuous batching.
+"""Batched serving engine: device-resident continuous batching.
 
 The privacy story of the paper means the *client* runs inference; this engine
 is the server-side counterpart used for (a) the e2e batched-serving example
-mandated for a serving-kind paper, and (b) the decode-path functions whose
-lowered forms the decode dry-run shapes measure.
+mandated for a serving-kind paper, and (b) the throughput benchmark behind
+the paper's claim that eq. 1 trajectory generation is fast enough for
+interactive risk prediction.
 
-Design: a fixed number of slots (the decode batch).  All slots step together
-(one jitted ``decode_step`` per tick — SPMD-friendly); finished slots are
-refilled from a pending queue via a jitted cache insertion
-(``dynamic_update_index_in_dim`` on the batch axis of the cache pytree).
-Delphi-type models sample with the competing-exponential mechanism; generic
-LMs sample from the categorical.
+Design — one jitted ``decode_and_sample`` step per engine tick:
+
+* the batched ``decode_step`` runs across **all slots at once** with per-slot
+  absolute positions (vector ``step`` plumbing in ``repro.models``), instead
+  of a ``vmap`` of single-slot decodes;
+* eq. 1 competing-exponential sampling happens **in-graph** right after the
+  logits head — ``sample_next_event`` (jnp reference, default) or the fused
+  Pallas kernel ``repro.kernels.tte_sample`` (``sampler="pallas"``).  Generic
+  LMs sample the Gumbel-max categorical from the same uniforms;
+* per-slot age / step / emitted-count / active state advances as device
+  arrays inside the tick (``advance_trajectory_state`` — the same censoring
+  semantics as the SDK: an event past ``max_age`` terminates BEFORE being
+  emitted); the host sees exactly ONE packed (4, slots) transfer per tick;
+* admissions run a **bucketed-padding batched prefill**: prompt lengths are
+  right-padded to power-of-two buckets and admission groups to power-of-two
+  batch buckets, so a request stream compiles a small fixed set of
+  (batch, seq) shapes instead of one jit per prompt length.  Padded cache
+  positions are invalidated (``pos = -1``) so decode never attends garbage;
+  bootstrap logits are gathered at each prompt's true last token
+  (``forward(..., last_index=...)``).
+
+``ReferenceEngine`` below preserves the original host-loop engine (per-slot
+vmap decode + host-side Python sampling) as the before/after benchmark
+baseline — ``benchmarks/run.py serve`` reports both.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import base as cb
 from repro.configs.base import ModelConfig
-from repro.core.sampler import sample_next_event
-from repro.models import decode_step, forward, make_decode_cache
+from repro.core.sampler import advance_trajectory_state, sample_next_event
+from repro.kernels import tte_sample
+from repro.models import (LayerCache, decode_step, forward, make_decode_cache)
+
+# Module-level so tests can monkeypatch/count device->host transfers: this is
+# the ONLY way the engine moves data off-device.
+_to_host = np.asarray
 
 
 @dataclasses.dataclass
@@ -32,14 +57,386 @@ class Request:
     tokens: np.ndarray                  # (S,) prompt
     ages: Optional[np.ndarray] = None   # (S,) for Delphi-style models
     max_new: int = 64
+    # optional pre-drawn U(0,1) of shape (max_new, V): injected for
+    # SDK/engine bit-parity tests (claims C2/C3).  Row i is consumed by the
+    # i-th sampled event (row 0 at admission, from the prefill logits).
+    uniforms: Optional[np.ndarray] = None
     # filled by the engine:
     out_tokens: Optional[List[int]] = None
     out_ages: Optional[List[float]] = None
     done: bool = False
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
+class _Knobs(NamedTuple):
+    """Hashable static engine parameters for the shared module-level jits.
+
+    The jitted tick/prefill functions live at module level with
+    ``(cfg, knobs)`` as static arguments, so every engine instance with the
+    same configuration shares ONE compiled executable per shape — a second
+    engine (or a restarted serving process within one interpreter) pays no
+    recompilation."""
+    slots: int
+    max_context: int
+    is_delphi: bool
+    use_pallas: bool
+    inv_temp: float
+    max_age: float
+    death_token: int
+    vocab: int
+
+
+def _sample_evt(lg, u, kn: _Knobs):
+    """(B, V) logits + uniforms -> (event (B,), waiting time (B,))."""
+    if kn.is_delphi:
+        if kn.use_pallas:
+            return tte_sample(lg, u)
+        return sample_next_event(lg, u)
+    g = -jnp.log(-jnp.log(jnp.clip(u, 1e-12, 1.0 - 1e-12)))
+    evt = jnp.argmax(lg * kn.inv_temp + g, axis=-1).astype(jnp.int32)
+    return evt, jnp.zeros(evt.shape, jnp.float32)
+
+
+def _advance(lg, u, age, n_emitted, max_new, next_pos, active, kn: _Knobs):
+    evt, tmin = _sample_evt(lg, u, kn)
+    return advance_trajectory_state(
+        evt, tmin, age, n_emitted, max_new, next_pos, active,
+        max_age=kn.max_age if kn.is_delphi else np.inf,
+        death_token=kn.death_token if kn.is_delphi else -1,
+        max_context=kn.max_context)
+
+
+def _pack(adv):
+    return jnp.stack([adv["evt"].astype(jnp.float32), adv["age"],
+                      adv["emit"].astype(jnp.float32),
+                      adv["finished"].astype(jnp.float32)])
+
+
+def _tick_core(params, cache, state, u, cfg: ModelConfig, kn: _Knobs):
+    batch = {"tokens": state["last"][:, None]}
+    if cfg.age_encoding:
+        batch["ages"] = state["age"][:, None]
+    d = decode_step(params, cfg, cache, batch, state["step"])
+    lg = d["logits"][:, 0].astype(jnp.float32)
+    next_step = jnp.where(state["active"], state["step"] + 1, state["step"])
+    adv = _advance(lg, u, state["age"], state["n_emitted"], state["max_new"],
+                   next_step, state["active"], kn)
+    new_state = {
+        "last": jnp.where(adv["emit"], adv["evt"], state["last"]),
+        "age": adv["age"],
+        "step": next_step,
+        "n_emitted": adv["n_emitted"],
+        "max_new": state["max_new"],
+        "active": state["active"] & ~adv["finished"],
+    }
+    return d["cache"], new_state, _pack(adv)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kn"),
+                   donate_argnums=(1, 2))
+def _tick_u_jit(params, cache, state, u, *, cfg, kn):
+    return _tick_core(params, cache, state, u, cfg, kn)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kn"),
+                   donate_argnums=(1, 2))
+def _tick_rng_jit(params, cache, state, key, *, cfg, kn):
+    key, sub = jax.random.split(key)
+    u = jax.random.uniform(sub, (kn.slots, kn.vocab))
+    cache, state, packed = _tick_core(params, cache, state, u, cfg, kn)
+    return cache, state, packed, key
+
+
+def _prefill_core(params, tokens, ages, last_idx, age0, lengths, max_new, u,
+                  cfg: ModelConfig, kn: _Knobs):
+    batch: Dict[str, Any] = {"tokens": tokens}
+    if cfg.age_encoding:
+        batch["ages"] = ages
+    out = forward(params, cfg, batch, mode="prefill",
+                  cache_width=kn.max_context, last_index=last_idx)
+    cache_rows = _mask_padded_positions(out["cache"], last_idx)
+    lg = out["logits"][:, 0].astype(jnp.float32)
+    nb = tokens.shape[0]
+    active = jnp.ones((nb,), bool)
+    adv = _advance(lg, u, age0, jnp.zeros((nb,), jnp.int32), max_new,
+                   lengths, active, kn)
+    rows = {
+        "last": jnp.where(adv["emit"], adv["evt"], 0),
+        "age": adv["age"],
+        "step": lengths,
+        "n_emitted": adv["n_emitted"],
+        "max_new": max_new,
+        "active": active & ~adv["finished"],
+    }
+    return cache_rows, rows, _pack(adv)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kn"))
+def _prefill_u_jit(params, tokens, ages, last_idx, age0, lengths, max_new, u,
+                   *, cfg, kn):
+    return _prefill_core(params, tokens, ages, last_idx, age0, lengths,
+                         max_new, u, cfg, kn)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kn"))
+def _prefill_rng_jit(params, tokens, ages, last_idx, age0, lengths, max_new,
+                     key, *, cfg, kn):
+    key, sub = jax.random.split(key)
+    u = jax.random.uniform(sub, (tokens.shape[0], kn.vocab))
+    cache_rows, rows, packed = _prefill_core(
+        params, tokens, ages, last_idx, age0, lengths, max_new, u, cfg, kn)
+    return cache_rows, rows, packed, key
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert_rows_jit(cache, rows_cache, slot_ids):
+    """One scatter writes all admitted prefill rows into the big cache.
+
+    cache leaves are (L, B, ...) with the slot axis at 1; rows_cache leaves
+    (L, n, ...) land at batch indices ``slot_ids`` (n,) — a single jitted
+    dispatch per admission batch instead of one whole-cache update per slot.
+    """
+    return jax.tree_util.tree_map(
+        lambda buf, new: buf.at[:, slot_ids].set(new.astype(buf.dtype)),
+        cache, rows_cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _commit_jit(state, slot_ids, rows):
+    return {k: state[k].at[slot_ids].set(rows[k].astype(state[k].dtype))
+            for k in state}
+
+
 class BatchedEngine:
-    """Slot-based continuous batching over a jitted decode step."""
+    """Slot-based continuous batching, fully device-resident between syncs."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_context: int = 512, temperature: float = 1.0,
+                 seed: int = 0, sampler: str = "jnp",
+                 min_seq_bucket: int = 8):
+        if cfg.frontend is not None or cfg.arch_type in (cb.AUDIO, cb.ENC_DEC):
+            raise ValueError("engine serves token-only architectures")
+        if sampler not in ("jnp", "pallas"):
+            raise ValueError(f"sampler must be 'jnp' or 'pallas': {sampler!r}")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_context = max_context
+        self.temperature = temperature
+        self.is_delphi = cfg.age_encoding
+        self.sampler = sampler
+        self.min_seq_bucket = min_seq_bucket
+        # right-padding a prefill is only sound when padded positions can be
+        # masked out of the state — true for KV-cache attention (pos = -1),
+        # false for recurrent SSM/hybrid state; those admit unbucketed.
+        self.bucketed = cfg.arch_type in (cb.DENSE, cb.MOE, cb.VLM)
+
+        self._rng = jax.random.PRNGKey(seed)
+        self.cache = make_decode_cache(params, cfg, slots, max_context)
+        self._state: Dict[str, jax.Array] = {
+            "last": jnp.zeros((slots,), jnp.int32),
+            "age": jnp.zeros((slots,), jnp.float32),
+            "step": jnp.zeros((slots,), jnp.int32),
+            "n_emitted": jnp.zeros((slots,), jnp.int32),
+            "max_new": jnp.ones((slots,), jnp.int32),
+            "active": jnp.zeros((slots,), bool),
+        }
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.pending: List[Request] = []
+        self.completed: List[Request] = []
+        # instrumentation (asserted on by tests, reported by benchmarks)
+        self.ticks = 0
+        self.host_syncs = 0
+        self.admit_batches = 0
+        self.prefill_shapes: set = set()
+        self._kn = _Knobs(
+            slots=slots, max_context=max_context,
+            is_delphi=self.is_delphi, use_pallas=sampler == "pallas",
+            inv_temp=1.0 / max(temperature, 1e-6),
+            max_age=cfg.max_age, death_token=cfg.death_token,
+            vocab=cfg.vocab_size)
+
+    # -- device->host boundary (the only one) -------------------------------
+    def _fetch(self, x) -> np.ndarray:
+        self.host_syncs += 1
+        return _to_host(x)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request):
+        if len(req.tokens) == 0:
+            raise ValueError("empty prompt")
+        req.out_tokens, req.out_ages = [], []
+        self.pending.append(req)
+
+    # -- admission: bucketed batched prefill --------------------------------
+    def _seq_bucket(self, n: int) -> int:
+        return max(_next_pow2(n), self.min_seq_bucket)
+
+    def _admit(self):
+        while self.pending:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free:
+                return
+            injected = self.pending[0].uniforms is not None
+            # one tick samples all slots from ONE uniform source: defer
+            # requests whose injectedness differs from the active cohort
+            # until it drains (they are admitted on a later tick)
+            occupied = [r for r in self.slot_req if r is not None]
+            if occupied and (occupied[0].uniforms is not None) != injected:
+                return
+            group: List[Request] = []
+            limit = len(free) if self.bucketed else 1
+            if len(self.pending[0].tokens) > self.max_context:
+                # over-width prompt: exact-shape solo admission (the ring
+                # cache keeps its last max_context tokens); never grouped,
+                # or shorter groupmates would be evicted by the S>W pack
+                limit = 1
+            while (self.pending and len(group) < limit
+                   and (self.pending[0].uniforms is not None) == injected
+                   and (not group
+                        or len(self.pending[0].tokens) <= self.max_context)):
+                group.append(self.pending.pop(0))
+            self._admit_group(group, free[:len(group)], injected)
+
+    def _admit_group(self, group: List[Request], slot_ids: List[int],
+                     injected: bool):
+        n = len(group)
+        lens = [len(r.tokens) for r in group]
+        if max(lens) > self.max_context:
+            sb, nb = max(lens), n            # solo over-width admission
+        elif self.bucketed:
+            # never bucket past the ring width: a pad-rounded S > W would
+            # evict valid prompt context via the S>W ring pack
+            sb = min(self._seq_bucket(max(lens)), self.max_context)
+            nb = min(_next_pow2(n), self.slots)
+        else:
+            sb, nb = max(lens), n
+        self.prefill_shapes.add((nb, sb))
+
+        tokens = np.zeros((nb, sb), np.int32)
+        ages = np.zeros((nb, sb), np.float32)
+        age0 = np.zeros((nb,), np.float32)
+        lengths = np.full((nb,), lens[0], np.int32)
+        max_new = np.full((nb,), 1, np.int32)
+        for j, r in enumerate(group):
+            S = lens[j]
+            tokens[j, :S] = r.tokens
+            if r.ages is not None:
+                ages[j, :S] = r.ages
+                ages[j, S:] = r.ages[-1]
+                age0[j] = float(r.ages[-1])
+            lengths[j] = S
+            max_new[j] = r.max_new
+        tokens[n:] = tokens[0]       # padded admission rows: clones of row 0,
+        ages[n:] = ages[0]           # computed and discarded
+        last_idx = lengths - 1
+
+        args = (self.params, jnp.asarray(tokens), jnp.asarray(ages),
+                jnp.asarray(last_idx), jnp.asarray(age0), jnp.asarray(lengths),
+                jnp.asarray(max_new))
+        if injected:
+            u = np.full((nb, self.cfg.vocab_size), 0.5, np.float32)
+            for j, r in enumerate(group):
+                u[j] = r.uniforms[0]
+            cache_rows, rows, packed = _prefill_u_jit(
+                *args, jnp.asarray(u), cfg=self.cfg, kn=self._kn)
+        else:
+            cache_rows, rows, packed, self._rng = _prefill_rng_jit(
+                *args, self._rng, cfg=self.cfg, kn=self._kn)
+
+        ids = jnp.asarray(np.asarray(slot_ids, np.int32))
+        self.cache = _insert_rows_jit(
+            self.cache, jax.tree_util.tree_map(lambda a: a[:, :n], cache_rows),
+            ids)
+        self._state = _commit_jit(
+            self._state, ids, jax.tree_util.tree_map(lambda a: a[:n], rows))
+
+        self.admit_batches += 1
+        arr = self._fetch(packed)    # ONE sync per admission batch
+        for j, (req, slot) in enumerate(zip(group, slot_ids)):
+            self.slot_req[slot] = req
+            self._apply_host(req, slot, arr[:, j])
+
+    def _apply_host(self, req: Request, slot: int, col: np.ndarray):
+        evt, age, emit, finished = col
+        if emit >= 0.5:
+            req.out_tokens.append(int(evt))
+            if self.is_delphi:
+                req.out_ages.append(float(age))
+        if finished >= 0.5:
+            req.done = True
+            self.completed.append(req)
+            self.slot_req[slot] = None
+
+    # -- the tick ------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine tick: admit pending, decode+sample all slots in-graph."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        self.ticks += 1
+        injected = [i for i in active if self.slot_req[i].uniforms is not None]
+        if injected and len(injected) != len(active):
+            raise ValueError("cannot mix uniform-injected and RNG-sampled "
+                             "requests in one tick")
+        if injected:
+            u = np.full((self.slots, self.cfg.vocab_size), 0.5, np.float32)
+            for i in active:
+                r = self.slot_req[i]
+                u[i] = r.uniforms[len(r.out_tokens)]
+            self.cache, self._state, packed = _tick_u_jit(
+                self.params, self.cache, self._state, jnp.asarray(u),
+                cfg=self.cfg, kn=self._kn)
+        else:
+            self.cache, self._state, packed, self._rng = _tick_rng_jit(
+                self.params, self.cache, self._state, self._rng,
+                cfg=self.cfg, kn=self._kn)
+        arr = self._fetch(packed)    # ONE sync per tick
+        for slot in active:
+            self._apply_host(self.slot_req[slot], slot, arr[:, slot])
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.pending or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed
+
+
+def _mask_padded_positions(cache, last_idx):
+    """Invalidate ring-cache positions past each example's true last token.
+
+    Right-padded bucketed prefill writes garbage K/V at positions
+    ``len..bucket-1``; setting their ``pos`` to -1 makes ``decode_attention``
+    mask them until real decode writes reclaim the slots one position at a
+    time.  Non-attention cache components (SSM state) pass through — the
+    engine only buckets pure-attention architectures.
+    """
+    li = jnp.asarray(last_idx).reshape((1, -1, 1))
+
+    def fix(v):
+        if isinstance(v, LayerCache):
+            return v._replace(
+                pos=jnp.where((v.pos >= 0) & (v.pos <= li), v.pos, -1))
+        return v
+    return {k: fix(v) for k, v in cache.items()}
+
+
+# ===========================================================================
+# Reference engine — the original host-loop implementation, kept as the
+# before/after baseline for ``benchmarks/run.py serve``.  One vmapped
+# single-slot decode per tick, per-slot host-side Python sampling, and a
+# host round-trip per slot per tick.  (Retains the pre-parity-fix max-age
+# semantics: the event crossing max_age is still emitted.)
+# ===========================================================================
+class ReferenceEngine:
+    """Seed slot engine: vmap-of-single-slot decode + host-side sampling."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_context: int = 512, temperature: float = 1.0,
@@ -61,7 +458,6 @@ class BatchedEngine:
         self.completed: List[Request] = []
         self._build_jits()
 
-    # -- jitted primitives -------------------------------------------------
     def _build_jits(self):
         cfg = self.cfg
 
@@ -100,7 +496,6 @@ class BatchedEngine:
         self._step = _step
         self._insert = _insert
 
-    # -- public API ---------------------------------------------------------
     def submit(self, req: Request):
         req.out_tokens, req.out_ages = [], []
         self.pending.append(req)
@@ -178,7 +573,6 @@ def _batch_axes(cache):
 
     Cache leaves are stacked (L, B, ...) so the batch axis is 1."""
     return jax.tree_util.tree_map(lambda _: 1, cache)
-
 
 
 def _strip_batch_one(cache):

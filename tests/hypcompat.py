@@ -1,0 +1,53 @@
+"""Optional-``hypothesis`` shim for the property-based test modules.
+
+``hypothesis`` is a dev-only dependency (see ``requirements-dev.txt`` /
+``pyproject.toml`` extra ``dev``).  When it is installed this module
+re-exports the real API unchanged.  When it is absent, property tests are
+*skipped* (``pytest.importorskip`` semantics, but per-test instead of
+per-module) so the example-based tests in the same files still run and the
+suite degrades instead of erroring at collection.
+"""
+
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any strategy-construction call chain and returns itself."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+    hnp = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # No functools.wraps: the skipper must expose a ZERO-arg
+            # signature, or pytest would treat the hypothesis-provided
+            # parameters as missing fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "hnp"]

@@ -1,8 +1,7 @@
 """Synthetic simulator + pipeline invariants (hypothesis where meaningful)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from hypcompat import given, settings, st
 
 from repro.data import (SimulatorConfig, batches, dataset_stats,
                         generate_dataset, pack_trajectories)

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from hypcompat import given, settings, st
 
 from repro.kernels import flash_attention, ssd_intra, tte_sample
 from repro.kernels import ref

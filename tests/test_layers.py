@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from hypcompat import given, settings, st
 
 from repro.configs import get_config
 from repro.models.layers import (age_encoding, apply_norm, apply_rope,

@@ -1,9 +1,8 @@
 """Dual loss: the competing-risk factorization identity and masking (C3)."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from hypcompat import hnp, st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypcompat import given, settings
 
 from repro.core import dual_loss, event_ce, joint_nll, time_nll
 

@@ -4,9 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from hypcompat import given, hnp, settings, st
 
 from repro.configs import get_config
 from repro.core import (generate_trajectories, init_delphi,

@@ -116,6 +116,21 @@ def test_sdk_vs_core_trajectory_parity(artifact):
         sdk_out["ages"], core_out["ages"][0, 3:3 + n], rtol=0.08)
 
 
+def test_make_inputs_rejects_bad_calls(artifact):
+    """SDK hardening: clear errors instead of silent misreads/crashes."""
+    d, _, _ = artifact
+    sess = InferenceSession(d)
+    with pytest.raises(ValueError, match="ages"):
+        sess.get_logits([3, 10, 20], None)       # ages-manifest, no ages
+    with pytest.raises(ValueError, match="empty"):
+        sess.get_logits([], [])                  # would silently read index -1
+    with pytest.raises(ValueError, match="mismatch"):
+        sess.get_logits([3, 10], [0.0])
+    with pytest.raises(ValueError, match="longer than"):
+        sess.get_logits(list(range(3, 3 + sess.seq_len + 1)),
+                        [0.0] * (sess.seq_len + 1))
+
+
 def test_runtime_offline(artifact, monkeypatch):
     """C5: loading + running the artifact touches no network APIs."""
     import socket

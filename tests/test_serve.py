@@ -34,8 +34,11 @@ def test_more_requests_than_slots(engine_setup):
     done = eng.run()
     assert len(done) == 7
     for r in done:
-        assert r.done and 1 <= len(r.out_tokens) <= 6
+        # 0 emitted events is legal: SDK-parity semantics censor an event
+        # whose waiting time crosses max_age BEFORE emitting it
+        assert r.done and len(r.out_tokens) <= 6
         assert len(r.out_ages) == len(r.out_tokens)
+        assert all(a <= cfg.max_age + 1e-6 for a in r.out_ages)
         assert all(b >= a - 1e-6 for a, b in zip(r.out_ages, r.out_ages[1:]))
 
 

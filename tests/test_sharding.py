@@ -4,8 +4,7 @@ import os
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from hypcompat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
