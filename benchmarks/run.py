@@ -9,6 +9,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     generation (paper-faithful client path)
   trajectory_batched_graph          beyond-paper: in-graph batched sampler
                                     (lax.fori_loop + KV cache), events/s
+  sdk_v1_fullgraph / sdk_v2_decode  artifact spec v2: full-graph-per-token
+                                    client loop vs exported prefill + KV-
+                                    cached decode graphs (tokens/s, same
+                                    injected uniforms -> same events)
   tte_fused_kernel / tte_ref        eq. 1 sampler: fused Pallas kernel
                                     (interpret-mode CPU proxy) vs jnp oracle
   train_step_delphi                 dual-loss training throughput, tokens/s
@@ -102,6 +106,66 @@ def bench_trajectory_generation():
     ev_g = B * n_events
     _row("trajectory_batched_graph", us_g / ev_g,
          f"{ev_g * 1e6 / us_g:.1f} events/s (beyond-paper batched path)")
+
+
+def bench_sdk():
+    """Before/after for the artifact spec-v2 redesign: the v1 client path
+    (re-running the O(S·V) full graph per generated token) vs the v2 path
+    (one prefill, then one KV-cached decode_step per token), same artifact,
+    same injected uniforms.  Early events are bit-identical; over a long
+    horizon fp fusion noise compounds through the age feedback (the caveat
+    tests/test_serve_device.py documents), so parity is asserted on the
+    leading prefix and the agreement length is reported."""
+    from repro.api import Client
+    from repro.configs import get_config
+    from repro.core import init_delphi
+    from repro.sdk import export_model
+
+    # the artifact keeps the config's native fixed axis (S=256): that is the
+    # graph the paper's App ships, and exactly what the v1 client re-runs
+    # once per generated token
+    cfg = get_config("delphi-2m").replace(dtype="float32", max_age=1e9)
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    d = tempfile.mkdtemp()
+    export_model(params, cfg, d)
+
+    toks, ags = [3, 500, 700], [0.0, 30.0, 40.0]
+    max_new = 48
+    rng = np.random.default_rng(7)
+    u = rng.uniform(size=(max_new, cfg.vocab_size)).astype(np.float32)
+
+    v1 = Client.from_artifact(d, use_decode_graph=False)
+    v2 = Client.from_artifact(d)
+
+    def measure(client):
+        def gen():
+            return client.generate(tokens=toks, ages=ags, max_new=max_new,
+                                   uniforms=u)
+        gen()                                    # warm the graph jits
+        ts, ev = [], None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = gen()
+            ts.append(time.perf_counter() - t0)
+            ev = len(out.tokens)
+        return ev, float(np.median(ts)), out
+
+    ev1, dt1, out1 = measure(v1)
+    _row("sdk_v1_fullgraph", dt1 * 1e6 / max(ev1, 1),
+         f"{ev1 / dt1:.1f} tokens/s (full graph per token)")
+    ev2, dt2, out2 = measure(v2)
+    _row("sdk_v2_decode", dt2 * 1e6 / max(ev2, 1),
+         f"{ev2 / dt2:.1f} tokens/s (prefill + KV-cached decode)")
+    agree = 0
+    for a, b in zip(out1.tokens, out2.tokens):
+        if a != b:
+            break
+        agree += 1
+    assert agree >= min(8, ev1), \
+        f"v1/v2 diverged after {agree} events — expected >= 8"
+    _row("sdk_v2_speedup", 0.0,
+         f"{(ev2 / dt2) / max(ev1 / dt1, 1e-9):.2f}x tokens/s v2 vs v1 "
+         f"({ev1} events, first {agree} bit-identical)")
 
 
 def bench_tte_kernel():
@@ -237,6 +301,7 @@ def bench_roofline():
 BENCHES = {
     "portability": bench_runtime_portability,
     "trajectory": bench_trajectory_generation,
+    "sdk": bench_sdk,
     "tte": bench_tte_kernel,
     "train": bench_train_step,
     "serve": bench_serving_engine,

@@ -3,7 +3,10 @@ client" -> load in a model-code-free runtime -> interactive generation.
 
 This is the reproduction of Figures 2-3: the artifact (our ONNX analogue)
 fully decouples inference from the training framework, and all health data
-stays on the "client" side of the boundary.
+stays on the "client" side of the boundary.  With artifact spec v2 the
+client generates via the exported prefill + KV-cached decode graphs
+(``repro.api.Client``) instead of re-running the full graph per token; the
+legacy ``InferenceSession`` shim keeps the v1 loop for comparison.
 
 Run:  PYTHONPATH=src python examples/export_and_serve.py
 """
@@ -11,14 +14,14 @@ import json
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import Client
 from repro.configs import get_config
 from repro.core import init_delphi
 from repro.data import (SimulatorConfig, batches, generate_dataset,
                         pack_trajectories)
 from repro.data import vocab as V
-from repro.sdk import InferenceSession, export_model, verify_checksums
+from repro.sdk import export_model, verify_checksums
 from repro.train import OptimizerConfig, train_loop
 
 
@@ -34,33 +37,45 @@ def main():
                                            total_steps=60),
                            ti, objective="delphi", steps=60, log_every=20)
 
-    print("== export: the ONNX-conversion step (model.bin + params + "
-          "FAIR manifest) ==")
+    print("== export: the ONNX-conversion step (full + prefill + decode "
+          "graphs, params, FAIR manifest) ==")
     d = tempfile.mkdtemp(prefix="delphi_artifact_")
-    export_model(params, cfg, d)
+    export_model(params, cfg, d)                 # spec v2 by default
     print("   artifact:", d)
-    print("   checksums verified:", verify_checksums(d))
+    report = verify_checksums(d)                 # per-file integrity report
+    print(f"   checksums: {report} "
+          f"({', '.join(sorted(report.files))})")
     with open(f"{d}/manifest.json") as f:
         m = json.load(f)
     print("   FAIR manifest:", json.dumps(
-        {k: m[k] for k in ("identifier", "interchange_format", "license",
-                           "privacy")}, indent=4))
+        {k: m[k] for k in ("identifier", "spec_version",
+                           "interchange_format", "license", "privacy")},
+        indent=4))
 
     print("== client side: load the artifact (no model code, no network) ==")
-    sess = InferenceSession(d)   # <- imports nothing from repro.models/core
+    # migration note: InferenceSession(d) still works (it is now a shim over
+    # this Client, pinned to the v1 full-graph loop); Client.from_artifact
+    # uses the v2 prefill+decode graphs — O(1) model work per token.
+    client = Client.from_artifact(d)
     tok, age = train[1]
     half = max(len(tok) // 2, 2)
     print(f"   input trajectory ({half} events, like the App's left panel):")
     for t, a in list(zip(tok[:half], age[:half]))[-5:]:
         print(f"     age {a:5.1f}  {V.code_name(int(t))}")
 
-    out = sess.generateTrajectory(tok[:half].tolist(), age[:half].tolist(),
-                                  max_new=20)
-    print(f"   predicted continuation (right panel), {len(out['tokens'])} "
-          f"events:")
-    for t, a in zip(out["tokens"], out["ages"]):
-        print(f"     age {a:5.1f}  {V.code_name(int(t))}")
-    print("   (termination: Death token or age 85, paper defaults)")
+    print("   predicted continuation (right panel), streamed as sampled:")
+    n = 0
+    for ev in client.stream(tokens=tok[:half].tolist(),
+                            ages=age[:half].tolist(), max_new=20):
+        print(f"     age {ev.age:5.1f}  {V.code_name(ev.token)}")
+        n += 1
+    print(f"   {n} events (termination: Death token or age 85, "
+          f"paper defaults)")
+
+    print("   5-year morbidity risks (the App's displayed output):")
+    for item in client.risk(tok[:half].tolist(), age[:half].tolist(),
+                            horizon=5.0, top=5).items:
+        print(f"     {item.risk:6.1%}  {V.code_name(item.token)}")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,16 @@ def main():
     print(f"   {deaths}/{len(done)} trajectories terminated at Death; "
           f"rest censored at max age / max_new")
 
+    # the same engine behind the unified client API: per-event streaming
+    from repro.api import Client
+    client = Client.from_engine(eng)
+    tok, age = reqs[0]
+    h = max(len(tok) // 2, 2)
+    print("   streamed via repro.api.Client.from_engine(engine):")
+    for ev in client.stream(tokens=tok[:h].tolist(), ages=age[:h].tolist(),
+                            max_new=6):
+        print(f"     age {ev.age:5.1f}  {V.code_name(ev.token)}")
+
 
 if __name__ == "__main__":
     main()

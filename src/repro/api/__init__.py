@@ -1,0 +1,16 @@
+"""Unified inference client API (the paper's SDK surface, backend-pluggable).
+
+``Client`` + three backends (artifact / engine / local) over shared request
+and result schemas — see ``repro.api.client`` for the design notes.
+"""
+from repro.api.client import (ArtifactBackend, Client, EngineBackend,
+                              InferenceBackend, LocalBackend)
+from repro.api.schemas import (GenerateRequest, RiskItem, RiskReport,
+                               TrajectoryEvent, TrajectoryResult)
+
+__all__ = [
+    "Client", "InferenceBackend",
+    "ArtifactBackend", "EngineBackend", "LocalBackend",
+    "GenerateRequest", "TrajectoryEvent", "TrajectoryResult",
+    "RiskItem", "RiskReport",
+]

@@ -1,0 +1,93 @@
+"""Shared request/result schemas for every inference surface.
+
+One vocabulary of dataclasses used by all three ``repro.api`` backends (and by
+the ``InferenceSession`` compatibility shim), replacing the three divergent
+input/result conventions that grew around ``sdk.session``, ``serve.engine``
+and ``core.sampler``.  Pure data — no JAX, no model imports — so schemas can
+cross any process/serialization boundary the same way the artifact does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerateRequest:
+    """One trajectory-generation request, backend-agnostic.
+
+    ``tokens``/``ages`` are the patient's known history (ages omitted for
+    generic-LM configs).  ``max_age``/``death_token`` of ``None`` defer to the
+    backend's defaults (the artifact manifest's sampling block, or the model
+    config).  ``uniforms`` — optional pre-drawn (max_new, V) U(0,1), row i
+    consumed by the i-th sampled event — makes generation deterministic and
+    bit-comparable across backends (claims C2/C3); otherwise draws come from
+    ``rng`` (host backends) or a PRNGKey derived from ``seed``.
+    """
+    tokens: Sequence[int]
+    ages: Optional[Sequence[float]] = None
+    max_new: int = 64
+    max_age: Optional[float] = None
+    death_token: Optional[int] = None
+    uniforms: Optional[np.ndarray] = None
+    seed: int = 0
+    rng: Optional[np.random.Generator] = None
+
+
+@dataclasses.dataclass
+class TrajectoryEvent:
+    """One generated event, as yielded by ``Client.stream``."""
+    index: int                      # 0-based position in the generated suffix
+    token: int
+    age: Optional[float] = None     # None for generic-LM configs
+
+
+@dataclasses.dataclass
+class TrajectoryResult:
+    """Generated continuation of one trajectory (all backends)."""
+    tokens: List[int]
+    ages: List[float]
+    prompt_tokens: List[int]
+    prompt_ages: List[float]
+    backend: str = ""
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def full_tokens(self) -> List[int]:
+        return list(self.prompt_tokens) + list(self.tokens)
+
+    @property
+    def full_ages(self) -> List[float]:
+        return list(self.prompt_ages) + list(self.ages)
+
+    def events(self) -> List[TrajectoryEvent]:
+        ages: List[Optional[float]] = (list(self.ages) if self.ages
+                                       else [None] * len(self.tokens))
+        return [TrajectoryEvent(index=i, token=t, age=a)
+                for i, (t, a) in enumerate(zip(self.tokens, ages))]
+
+
+@dataclasses.dataclass
+class RiskItem:
+    token: int
+    risk: float
+
+
+@dataclasses.dataclass
+class RiskReport:
+    """Within-horizon next-event risks, highest first (the App's output)."""
+    horizon: float
+    items: List[RiskItem]
+    backend: str = ""
+
+    def top(self, n: int) -> List[RiskItem]:
+        return self.items[:n]
+
+    def as_dicts(self) -> List[dict]:
+        """Legacy ``InferenceSession.estimate_risk`` schema."""
+        return [{"token": it.token, "risk": it.risk} for it in self.items]

@@ -3,19 +3,22 @@ plus the risk-estimation and calibration layers the App exposes."""
 from repro.core.calibration import calibration_report, cohort_stats
 from repro.core.delphi import get_logits, init_delphi, loss_fn
 from repro.core.losses import dual_loss, event_ce, joint_nll, time_nll
-from repro.core.risk import (analytic_next_event_risk, disease_chapter_map,
+from repro.core.risk import (analytic_next_event_risk,
+                             analytic_next_event_risk_np, disease_chapter_map,
                              monte_carlo_risk, next_event_risk)
 from repro.core.sampler import (advance_trajectory_state,
                                 generate_trajectories,
                                 generate_trajectories_jit,
-                                sample_next_event, sample_waiting_times)
+                                sample_next_event, sample_next_event_np,
+                                sample_waiting_times)
 
 __all__ = [
     "calibration_report", "cohort_stats",
     "get_logits", "init_delphi", "loss_fn",
     "dual_loss", "event_ce", "joint_nll", "time_nll",
-    "analytic_next_event_risk", "disease_chapter_map", "monte_carlo_risk",
-    "next_event_risk",
+    "analytic_next_event_risk", "analytic_next_event_risk_np",
+    "disease_chapter_map", "monte_carlo_risk", "next_event_risk",
     "advance_trajectory_state", "generate_trajectories",
-    "generate_trajectories_jit", "sample_next_event", "sample_waiting_times",
+    "generate_trajectories_jit", "sample_next_event", "sample_next_event_np",
+    "sample_waiting_times",
 ]

@@ -23,6 +23,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.sampler import generate_trajectories
@@ -38,6 +39,17 @@ def analytic_next_event_risk(logits, horizon: float):
     log_rate = jax.nn.logsumexp(log_l, axis=-1, keepdims=True)   # log Lambda
     frac = jax.nn.softmax(log_l, axis=-1)                        # lambda_i/Lambda
     p_any = 1.0 - jnp.exp(-jnp.exp(log_rate) * horizon)
+    return frac * p_any
+
+
+def analytic_next_event_risk_np(logits, horizon: float) -> np.ndarray:
+    """Host-side fp64 twin of :func:`analytic_next_event_risk` for one (V,)
+    logit vector — the client-side postprocessing path (``repro.api`` /
+    ``InferenceSession.estimate_risk``)."""
+    lg = np.asarray(logits).astype(np.float64)
+    log_rate = np.logaddexp.reduce(lg)
+    frac = np.exp(lg - log_rate)
+    p_any = 1.0 - np.exp(-np.exp(log_rate) * horizon)
     return frac * p_any
 
 

@@ -23,6 +23,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, forward
@@ -40,6 +41,23 @@ def sample_next_event(logits, u):
     idx = jnp.argmin(t, axis=-1)
     tmin = jnp.take_along_axis(t, idx[..., None], axis=-1)[..., 0]
     return idx.astype(jnp.int32), tmin
+
+
+def sample_next_event_np(logits, u):
+    """Host-side NumPy twin of :func:`sample_next_event` (one trajectory).
+
+    The single eq.-1 implementation behind every host-side client loop
+    (``repro.api`` backends and the ``InferenceSession`` shim), so SDK-vs-core
+    parity rests on ONE pair of functions.  ``u`` keeps its incoming dtype
+    (injected fp32 uniforms stay fp32 through the log, matching the in-graph
+    sampler's arithmetic); logits are promoted to fp64 like the paper's JS
+    client.  Returns (event id, waiting time t_min) as Python scalars.
+    """
+    lg = np.asarray(logits).astype(np.float64)
+    u = np.clip(u, 1e-12, 1 - 1e-12)
+    t = -np.exp(-lg) * np.log(u)
+    evt = int(np.argmin(t))
+    return evt, float(t[evt])
 
 
 def advance_trajectory_state(evt, tmin, age, n_emitted, max_new, next_pos,

@@ -9,10 +9,17 @@ Writes one JSON per combination with cost_analysis, memory_analysis and the
 collective-bytes breakdown parsed from the partitioned HLO — the §Roofline
 inputs.
 """
-# The placeholder-device override MUST precede any jax-touching import.
+# The placeholder-device override MUST precede any jax-touching import, but
+# only for the CLI (`python -m repro.launch.dryrun` imports this module as
+# __main__ before anything touches jax).  Library importers (tests,
+# benchmarks) get NO side effect: mutating process-global XLA_FLAGS at plain
+# import time leaked 512 fake devices into every pytest run that merely
+# *collected* a module importing the pure helpers below, perturbing fp
+# reduction order across the whole suite.
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
 
 import argparse          # noqa: E402
 import json              # noqa: E402

@@ -531,6 +531,26 @@ def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], step,
     return {"logits": logits_head(params["embed"], x, cfg), "cache": new_cache}
 
 
+def mask_padded_positions(cache, last_idx):
+    """Invalidate ring-cache positions past each example's true last token.
+
+    Right-padded batched prefill (the serving engine's bucketed admission,
+    the exported spec-v2 prefill graph) writes garbage K/V at positions
+    ``len..S-1``; setting their ``pos`` to -1 makes ``decode_attention`` mask
+    them until real decode writes reclaim the slots one position at a time.
+    Non-attention cache components (SSM state) pass through — callers only
+    right-pad pure-attention architectures.  ``last_idx``: (B,) int32.
+    """
+    li = jnp.asarray(last_idx).reshape((1, -1, 1))
+
+    def fix(v):
+        if isinstance(v, LayerCache):
+            return v._replace(
+                pos=jnp.where((v.pos >= 0) & (v.pos <= li), v.pos, -1))
+        return v
+    return {k: fix(v) for k, v in cache.items()}
+
+
 def make_decode_cache(params, cfg: ModelConfig, batch: int, context_len: int):
     """Build an empty decode cache shaped as if ``context_len`` tokens had been
     processed (what the decode dry-run shapes lower against)."""

@@ -1,10 +1,14 @@
 """FAIR portability layer: export (ONNX analogue), runtime, SDK session."""
-from repro.sdk.export import export_model, nest
-from repro.sdk.manifest import (build_manifest, read_manifest, sha256_file,
-                                verify_checksums, write_manifest)
+from repro.sdk.export import build_inference_fns, export_model, nest
+from repro.sdk.manifest import (SPEC_V1, SPEC_V2, SPEC_VERSION, ChecksumError,
+                                ChecksumReport, build_manifest, read_manifest,
+                                sha256_file, verify_checksums, write_manifest)
 from repro.sdk.runtime import Runtime
 from repro.sdk.session import InferenceSession
 
-__all__ = ["export_model", "nest", "build_manifest", "read_manifest",
-           "sha256_file", "verify_checksums", "write_manifest", "Runtime",
+__all__ = ["build_inference_fns", "export_model", "nest",
+           "SPEC_V1", "SPEC_V2", "SPEC_VERSION",
+           "ChecksumError", "ChecksumReport",
+           "build_manifest", "read_manifest", "sha256_file",
+           "verify_checksums", "write_manifest", "Runtime",
            "InferenceSession"]

@@ -1,20 +1,27 @@
 """Model export: the ONNX-conversion step of the paper, JAX-native.
 
-``export_model`` serializes the *inference graph* (``get_logits``) via
-``jax.export`` into a StableHLO artifact plus a parameter archive and a FAIR
-manifest.  The artifact directory is self-contained:
+``export_model`` serializes inference graphs via ``jax.export`` into
+StableHLO artifacts plus a parameter archive and a FAIR manifest.  The
+artifact directory is self-contained:
 
-    model.bin       serialized StableHLO module (jax.export wire format)
+    model.bin       full-sequence graph  f(params, tokens[, ages]) -> logits
+    prefill.bin     (spec v2) prompt -> (last-token logits, KV cache leaves)
+    decode.bin      (spec v2) KV-cached one-token step: cache arrays are
+                    explicit graph inputs AND outputs, the way browser ONNX
+                    deployments ship decode graphs
     params.npz      parameter arrays keyed by flattened pytree path
     manifest.json   FAIR metadata (checksums, signature, provenance, sampling)
 
 The loading side (``sdk.runtime``) imports **no model code** — exactly the
-decoupling the paper achieves with ONNX (DESIGN.md §2, claim C2).
+decoupling the paper achieves with ONNX (DESIGN.md §2, claim C2).  The cache
+pytree is flattened to a plain list of arrays at the export boundary, so the
+serialized signatures contain only standard containers and the runtime never
+needs the ``LayerCache`` class.
 """
 from __future__ import annotations
 
 import os
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +30,13 @@ from jax import export as jexport
 
 from repro.configs.base import ModelConfig
 from repro.core.delphi import get_logits
-from repro.models import forward
-from repro.sdk.manifest import build_manifest, write_manifest
+from repro.models import decode_step, forward, mask_padded_positions
+from repro.sdk.manifest import (SPEC_V1, SPEC_V2, build_manifest,
+                                write_manifest)
+
+FULL_GRAPH = "model.bin"
+PREFILL_GRAPH = "prefill.bin"
+DECODE_GRAPH = "decode.bin"
 
 
 def _flatten_params(params) -> Dict[str, np.ndarray]:
@@ -48,38 +60,195 @@ def nest(flat: Dict[str, np.ndarray]) -> Dict:
     return root
 
 
-def export_model(params, cfg: ModelConfig, out_dir: str, *,
-                 seq_len: Optional[int] = None,
-                 logits_fn: Callable = None) -> str:
-    """Export the fixed-shape inference graph + params + manifest.
+def build_inference_fns(cfg: ModelConfig, seq_len: int) -> Dict[str, Any]:
+    """The three inference callables an artifact serializes, plus their specs.
 
-    The exported callable is ``f(params, tokens[, ages]) -> logits`` with
-    tokens (1, seq_len) int32 (the paper's App also exports a fixed-axes
-    single-trajectory graph).
+    Shared between ``export_model`` and ``repro.api.LocalBackend`` (which jits
+    the same functions in-process), so the artifact decode path and the local
+    decode path are the same graph by construction.
+
+    Returns dict with:
+      ``full(p, tokens[, ages]) -> logits (1, S, V)``
+      ``prefill(p, tokens[, ages], last_index) -> (logits (1, V), [cache...])``
+      ``decode(p, [cache...], token[, age], step) -> (logits (1, V), [cache...])``
+      ``cache_treedef`` / ``cache_leaves`` (ShapeDtypeStructs) and the
+      jax.ShapeDtypeStruct argument lists ``*_args`` for each graph.
     """
-    os.makedirs(out_dir, exist_ok=True)
-    S = seq_len or cfg.max_seq_len
+    S = seq_len
     delphi = cfg.age_encoding
 
-    if logits_fn is None:
-        if delphi:
-            def logits_fn(p, tokens, ages):
-                return get_logits(p, cfg, tokens, ages)
-        else:
-            def logits_fn(p, tokens):
-                return forward(p, cfg, {"tokens": tokens},
-                               mode="train")["logits"]
+    if delphi:
+        def full_fn(p, tokens, ages):
+            return get_logits(p, cfg, tokens, ages)
+    else:
+        def full_fn(p, tokens):
+            return forward(p, cfg, {"tokens": tokens},
+                           mode="train")["logits"]
 
+    def _batch(tokens, ages):
+        b = {"tokens": tokens}
+        if delphi:
+            b["ages"] = ages
+        return b
+
+    def _prefill(p, tokens, ages, last_index):
+        out = forward(p, cfg, _batch(tokens, ages), mode="prefill",
+                      cache_width=S, last_index=last_index)
+        # right-padded positions hold garbage K/V: invalidate them so the
+        # decode graph never attends past the prompt's true last token
+        cache = mask_padded_positions(out["cache"], last_index)
+        return out["logits"][:, 0], jax.tree_util.tree_leaves(cache)
+
+    if delphi:
+        def prefill_fn(p, tokens, ages, last_index):
+            return _prefill(p, tokens, ages, last_index)
+    else:
+        def prefill_fn(p, tokens, last_index):
+            return _prefill(p, tokens, None, last_index)
+
+    tok_s = jax.ShapeDtypeStruct((1, S), jnp.int32)
+    age_s = jax.ShapeDtypeStruct((1, S), jnp.float32)
+    idx_s = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+    def cache_of(p, tokens, ages):
+        return forward(p, cfg, _batch(tokens, ages), mode="prefill",
+                       cache_width=S)["cache"]
+
+    def cache_shape(p_spec):
+        shape = jax.eval_shape(cache_of, p_spec, tok_s,
+                               age_s if delphi else None)
+        return jax.tree_util.tree_flatten(shape)
+
+    # treedef is shape-independent; leaves need p_spec, resolved lazily
+    _treedef_box: list = []
+
+    def _unflatten(leaves):
+        return jax.tree_util.tree_unflatten(_treedef_box[0], leaves)
+
+    def _decode(p, cache_leaves, token, age, step):
+        cache = _unflatten(list(cache_leaves))
+        d = decode_step(p, cfg, cache, _batch(token, age), step)
+        return d["logits"][:, 0], jax.tree_util.tree_leaves(d["cache"])
+
+    if delphi:
+        def decode_fn(p, cache_leaves, token, age, step):
+            return _decode(p, cache_leaves, token, age, step)
+    else:
+        def decode_fn(p, cache_leaves, token, step):
+            return _decode(p, cache_leaves, None, token, step)
+
+    def resolve(p_spec):
+        """Bind the cache structure for ``p_spec``; returns arg-spec lists."""
+        leaves, treedef = cache_shape(p_spec)
+        _treedef_box[:] = [treedef]
+        full_args = [p_spec, tok_s] + ([age_s] if delphi else [])
+        prefill_args = full_args + [idx_s]
+        tok1 = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+        age1 = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+        step_s = jax.ShapeDtypeStruct((1,), jnp.int32)
+        decode_args = ([p_spec, leaves, tok1]
+                       + ([age1] if delphi else []) + [step_s])
+        return {"full": full_args, "prefill": prefill_args,
+                "decode": decode_args, "cache_leaves": leaves}
+
+    return {"full": full_fn, "prefill": prefill_fn, "decode": decode_fn,
+            "resolve": resolve, "delphi": delphi, "seq_len": S}
+
+
+def _graph_signatures(cfg: ModelConfig, S: int, delphi: bool,
+                      cache_leaves) -> Dict[str, Any]:
+    """The manifest ``graphs`` section: per-graph files + tensor signatures."""
+    V = cfg.vocab_size
+    tok = {"name": "tokens", "shape": [1, S], "dtype": "int32"}
+    age = {"name": "ages", "shape": [1, S], "dtype": "float32"}
+    cache_spec = [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                  for l in cache_leaves]
+    cache_io = {"name": "cache", "leaves": len(cache_leaves)}
+    return {
+        "full": {
+            "file": FULL_GRAPH,
+            "inputs": [tok] + ([age] if delphi else []),
+            "outputs": [{"name": "logits", "shape": [1, S, V],
+                         "dtype": "float32"}],
+        },
+        "prefill": {
+            "file": PREFILL_GRAPH,
+            "inputs": ([tok] + ([age] if delphi else [])
+                       + [{"name": "last_index", "shape": [1],
+                           "dtype": "int32"}]),
+            "outputs": [{"name": "logits", "shape": [1, V],
+                         "dtype": "float32"}, cache_io],
+        },
+        "decode_step": {
+            "file": DECODE_GRAPH,
+            "inputs": ([cache_io,
+                        {"name": "token", "shape": [1, 1], "dtype": "int32"}]
+                       + ([{"name": "age", "shape": [1, 1],
+                            "dtype": "float32"}] if delphi else [])
+                       + [{"name": "step", "shape": [1], "dtype": "int32"}]),
+            "outputs": [{"name": "logits", "shape": [1, V],
+                         "dtype": "float32"}, cache_io],
+        },
+        "cache": {"n_leaves": len(cache_leaves), "leaves": cache_spec,
+                  "width": S},
+    }
+
+
+def export_model(params, cfg: ModelConfig, out_dir: str, *,
+                 seq_len: Optional[int] = None,
+                 logits_fn: Optional[Callable] = None,
+                 spec_version: str = SPEC_V2) -> str:
+    """Export inference graph(s) + params + manifest.
+
+    The full graph is ``f(params, tokens[, ages]) -> logits`` with tokens
+    (1, seq_len) int32 (the paper's App also exports a fixed-axes
+    single-trajectory graph).  Spec v2 (the default) additionally exports the
+    prefill and KV-cached decode_step graphs so clients generate in O(1)
+    model work per token instead of re-running the O(S·V) full graph.
+
+    ``spec_version="1"``/``"1.0"`` exports a v1 (full-graph-only) artifact;
+    a custom ``logits_fn`` implies v1 (there is no way to derive prefill /
+    decode graphs from an opaque callable).
+    """
+    if spec_version in ("1", SPEC_V1):
+        spec_version = SPEC_V1
+    elif spec_version in ("2", SPEC_V2):
+        spec_version = SPEC_V2
+    else:
+        raise ValueError(f"unknown artifact spec_version {spec_version!r}; "
+                         f"supported: {SPEC_V1!r}, {SPEC_V2!r}")
+    if logits_fn is not None and spec_version != SPEC_V1:
+        raise ValueError(
+            "a custom logits_fn exports only the full graph: pass "
+            "spec_version='1' (prefill/decode graphs cannot be derived "
+            "from an opaque callable)")
+    S = seq_len or cfg.max_seq_len
+    if S > cfg.max_seq_len:
+        raise ValueError(
+            f"seq_len={S} exceeds cfg.max_seq_len={cfg.max_seq_len}: the "
+            f"exported graph would compute positions the model was never "
+            f"configured for — pass seq_len <= {cfg.max_seq_len} or raise "
+            f"max_seq_len in the config")
+    os.makedirs(out_dir, exist_ok=True)
+    delphi = cfg.age_encoding
+
+    fns = build_inference_fns(cfg, S)
     p_spec = jax.tree_util.tree_map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
-    args = [p_spec, jax.ShapeDtypeStruct((1, S), jnp.int32)]
-    if delphi:
-        args.append(jax.ShapeDtypeStruct((1, S), jnp.float32))
+    specs = fns["resolve"](p_spec)
 
-    exported = jexport.export(jax.jit(logits_fn))(*args)
-    blob = exported.serialize()
-    with open(os.path.join(out_dir, "model.bin"), "wb") as f:
-        f.write(blob)
+    def _export_graph(fn, args, fname):
+        exported = jexport.export(jax.jit(fn))(*args)
+        with open(os.path.join(out_dir, fname), "wb") as f:
+            f.write(exported.serialize())
+
+    _export_graph(logits_fn if logits_fn is not None else fns["full"],
+                  specs["full"], FULL_GRAPH)
+    graphs = None
+    if spec_version == SPEC_V2:
+        _export_graph(fns["prefill"], specs["prefill"], PREFILL_GRAPH)
+        _export_graph(fns["decode"], specs["decode"], DECODE_GRAPH)
+        graphs = _graph_signatures(cfg, S, delphi, specs["cache_leaves"])
     np.savez(os.path.join(out_dir, "params.npz"), **_flatten_params(params))
 
     signature = {
@@ -91,5 +260,7 @@ def export_model(params, cfg: ModelConfig, out_dir: str, *,
                      "dtype": "float32"}],
         "params": "params.npz (flattened pytree paths)",
     }
-    write_manifest(build_manifest(cfg, out_dir, signature=signature), out_dir)
+    write_manifest(build_manifest(cfg, out_dir, signature=signature,
+                                  spec_version=spec_version, graphs=graphs),
+                   out_dir)
     return out_dir

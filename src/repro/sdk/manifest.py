@@ -6,6 +6,15 @@ needed), Interoperable (an open interchange format — StableHLO here, ONNX in
 the paper), and Reusable (documented signature, provenance, license, and the
 sampling semantics needed to *use* the logits).  This module materializes
 those fields as ``manifest.json``.
+
+Spec versions
+-------------
+* **v1** (``1.0``) — one fixed-shape full-sequence graph (``model.bin``).
+* **v2** (``2.0``) — additionally ships a ``prefill`` graph and a KV-cached
+  ``decode_step`` graph (cache arrays as explicit graph I/O, the way browser
+  ONNX deployments ship decode graphs), described under the ``graphs`` key.
+``sdk.runtime.Runtime`` dispatches on ``spec_version``; v1 artifacts keep
+loading unchanged.
 """
 from __future__ import annotations
 
@@ -13,11 +22,13 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 from repro.configs.base import ModelConfig
 
-SPEC_VERSION = "1.0"
+SPEC_V1 = "1.0"
+SPEC_V2 = "2.0"
+SPEC_VERSION = SPEC_V2
 INTERCHANGE = "stablehlo+jax.export"   # the ONNX analogue (DESIGN.md §2)
 
 
@@ -31,6 +42,8 @@ def sha256_file(path: str) -> str:
 
 def build_manifest(cfg: ModelConfig, artifact_dir: str, *,
                    signature: Dict[str, Any],
+                   spec_version: str = SPEC_VERSION,
+                   graphs: Optional[Dict[str, Any]] = None,
                    provenance: str = "Duarte et al. 2026; Shmatko et al. 2025 "
                                      "(Delphi-2M); trained on synthetic data",
                    license_id: str = "Apache-2.0") -> Dict[str, Any]:
@@ -39,8 +52,8 @@ def build_manifest(cfg: ModelConfig, artifact_dir: str, *,
         if name == "manifest.json":
             continue
         files[name] = sha256_file(os.path.join(artifact_dir, name))
-    return {
-        "spec_version": SPEC_VERSION,
+    m = {
+        "spec_version": spec_version,
         # F — findability
         "name": cfg.name,
         "identifier": f"repro/{cfg.name}@{files.get('model.bin', 'unhashed')[:23]}",
@@ -66,6 +79,9 @@ def build_manifest(cfg: ModelConfig, artifact_dir: str, *,
         "privacy": "inference requires only this artifact; no network calls, "
                    "no server-side state (paper claim C5)",
     }
+    if graphs is not None:
+        m["graphs"] = graphs
+    return m
 
 
 def write_manifest(manifest: Dict[str, Any], artifact_dir: str) -> str:
@@ -80,9 +96,62 @@ def read_manifest(artifact_dir: str) -> Dict[str, Any]:
         return json.load(f)
 
 
-def verify_checksums(artifact_dir: str) -> bool:
+class ChecksumError(ValueError):
+    """A manifest-listed file is missing or fails its checksum."""
+
+
+OK, MISMATCH, MISSING = "ok", "mismatch", "missing"
+
+
+@dataclasses.dataclass
+class ChecksumReport:
+    """Per-file integrity verdict for one artifact directory.
+
+    ``files`` maps each manifest-listed file name to "ok" / "mismatch" /
+    "missing".  Truthy exactly when every file is "ok", so existing
+    ``assert verify_checksums(d)`` call sites keep working.
+    """
+    artifact_dir: str
+    files: Dict[str, str]
+
+    @property
+    def ok(self) -> bool:
+        return all(v == OK for v in self.files.values())
+
+    @property
+    def bad_files(self) -> Dict[str, str]:
+        return {k: v for k, v in self.files.items() if v != OK}
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+    def __str__(self) -> str:
+        if self.ok:
+            return f"all {len(self.files)} files verified"
+        bad = ", ".join(f"{k}: {v}" for k, v in sorted(self.bad_files.items()))
+        return f"integrity failure ({bad})"
+
+
+def verify_checksums(artifact_dir: str, *, strict: bool = False
+                     ) -> ChecksumReport:
+    """Verify every manifest-listed file, returning a structured report.
+
+    A missing file is reported as "missing" (not raised), a digest mismatch
+    as "mismatch".  With ``strict=True`` any non-ok file raises
+    :class:`ChecksumError` naming the offending file(s).
+    """
     m = read_manifest(artifact_dir)
+    report: Dict[str, str] = {}
     for name, digest in m["files"].items():
-        if sha256_file(os.path.join(artifact_dir, name)) != digest:
-            return False
-    return True
+        path = os.path.join(artifact_dir, name)
+        if not os.path.isfile(path):
+            report[name] = MISSING
+        elif sha256_file(path) != digest:
+            report[name] = MISMATCH
+        else:
+            report[name] = OK
+    rep = ChecksumReport(artifact_dir=artifact_dir, files=report)
+    if strict and not rep.ok:
+        raise ChecksumError(
+            f"artifact {artifact_dir!r} failed verification: {rep}")
+    return rep

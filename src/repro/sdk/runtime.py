@@ -1,17 +1,22 @@
 """Artifact runtime — the ONNX-Runtime analogue.
 
-Loads an exported artifact directory and executes the inference graph.
+Loads an exported artifact directory and executes its inference graph(s).
 Deliberately imports **nothing** from ``repro.models`` / ``repro.core`` /
 ``repro.configs``: the graph semantics live entirely in the serialized
-StableHLO module, the parameters in ``params.npz``, and the metadata in
+StableHLO modules, the parameters in ``params.npz``, and the metadata in
 ``manifest.json`` — framework-decoupled exactly as the paper's ONNX artifact
 is (Reusability / Interoperability, claims C2 & C5).
+
+Spec dispatch: v1 artifacts carry only the full-sequence graph (``run``);
+v2 artifacts additionally expose ``prefill`` and ``decode_step`` whose KV
+cache is a plain list of arrays threaded through by the caller — no model
+classes cross the boundary.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -36,17 +41,64 @@ class Runtime:
         self.dir = artifact_dir
         with open(os.path.join(artifact_dir, "manifest.json")) as f:
             self.manifest = json.load(f)
-        with open(os.path.join(artifact_dir, "model.bin"), "rb") as f:
-            self._exported = jexport.deserialize(bytearray(f.read()))
+        self.spec_version = str(self.manifest.get("spec_version", "1.0"))
         data = np.load(os.path.join(artifact_dir, "params.npz"))
-        self._params = _nest({k: data[k] for k in data.files})
-        self._call = jax.jit(self._exported.call)
+        # one device_put at load: repeated graph calls reuse device arrays
+        self._params = jax.tree_util.tree_map(
+            jax.device_put, _nest({k: data[k] for k in data.files}))
 
+        self._calls: Dict[str, object] = {}
+        self._load_graph("full", "model.bin")
+        graphs = self.manifest.get("graphs") or {}
+        for name in ("prefill", "decode_step"):
+            if name in graphs:
+                self._load_graph(name, graphs[name]["file"])
+
+    def _load_graph(self, name: str, fname: str) -> None:
+        with open(os.path.join(self.dir, fname), "rb") as f:
+            exported = jexport.deserialize(bytearray(f.read()))
+        self._calls[name] = jax.jit(exported.call)
+
+    # -- introspection --------------------------------------------------------
     @property
     def input_signature(self) -> List[dict]:
         return self.manifest["signature"]["inputs"]
 
-    def run(self, *inputs: np.ndarray) -> np.ndarray:
-        """Execute the graph: run(tokens[, ages]) -> logits (numpy)."""
-        out = self._call(self._params, *[np.asarray(x) for x in inputs])
+    @property
+    def graphs(self) -> List[str]:
+        return sorted(self._calls)
+
+    @property
+    def has_decode_graph(self) -> bool:
+        return "decode_step" in self._calls
+
+    # -- execution ------------------------------------------------------------
+    def run(self, *inputs) -> np.ndarray:
+        """Execute the full graph: run(tokens[, ages]) -> logits (numpy)."""
+        out = self._calls["full"](self._params,
+                                  *[np.asarray(x) for x in inputs])
         return np.asarray(out)
+
+    def prefill(self, *inputs) -> Tuple[np.ndarray, List]:
+        """prefill(tokens[, ages], last_index) -> (logits (1, V), cache).
+
+        ``cache`` is an opaque list of device arrays to thread into
+        ``decode_step``; only spec-v2 artifacts ship this graph."""
+        logits, cache = self._graph("prefill")(
+            self._params, *[np.asarray(x) for x in inputs])
+        return np.asarray(logits), cache
+
+    def decode_step(self, cache: Sequence, *inputs
+                    ) -> Tuple[np.ndarray, List]:
+        """decode_step(cache, token[, age], step) -> (logits (1, V), cache)."""
+        logits, cache = self._graph("decode_step")(
+            self._params, list(cache), *[np.asarray(x) for x in inputs])
+        return np.asarray(logits), cache
+
+    def _graph(self, name: str):
+        if name not in self._calls:
+            raise ValueError(
+                f"artifact {self.dir!r} (spec {self.spec_version}) does not "
+                f"ship a {name!r} graph — re-export with spec v2 "
+                f"(sdk.export_model) to enable KV-cached decoding")
+        return self._calls[name]

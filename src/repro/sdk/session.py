@@ -1,13 +1,20 @@
-"""InferenceSession — the paper's JavaScript SDK, mirrored in NumPy.
+"""InferenceSession — the paper's JavaScript SDK, now a thin shim.
 
-The JS SDK's responsibilities (paper §Methods) map one-to-one:
+DEPRECATED surface: ``InferenceSession`` is kept as a compatibility layer
+over the unified client (``repro.api.Client`` with an ``ArtifactBackend``)
+and preserves the original call/return conventions exactly:
 
-  loading            -> ``InferenceSession(artifact_dir)`` (Runtime inside)
-  tensor creation    -> ``_make_inputs`` (pad to the graph's fixed axes)
-  execution          -> ``get_logits`` (alias ``getLogits``)
+  loading            -> ``InferenceSession(artifact_dir)``
+  tensor creation    -> backend ``_pad_inputs`` (pad to the graph's fixed axes)
+  execution          -> ``get_logits`` (alias ``getLogits``, deprecated)
   post-processing    -> ``generate_trajectory`` (alias ``generateTrajectory``)
                         — eq. 1 sampling in *host* NumPy, outside the graph,
                         exactly where the browser SDK samples in JS.
+
+The shim pins the paper-faithful **full-graph-per-token** loop
+(``use_decode_graph=False``) so v1 numerics are preserved bit-for-bit; new
+code should use ``repro.api.Client`` directly, which on spec-v2 artifacts
+generates via the exported prefill + KV-cached decode graphs instead.
 
 Termination defaults match the paper: Death token, max age 85 — both
 overridable by the SDK user.  ``uniforms`` can be injected for bit-parity
@@ -15,58 +22,43 @@ tests against the in-graph sampler (claims C2/C3).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.sdk.runtime import Runtime
+
+def _deprecated_alias(old: str, new: str, fn):
+    def wrapper(self, *args, **kwargs):
+        warnings.warn(f"InferenceSession.{old} is deprecated; use "
+                      f"repro.api.Client (or .{new}) instead",
+                      DeprecationWarning, stacklevel=2)
+        return fn(self, *args, **kwargs)
+    wrapper.__name__ = old
+    wrapper.__doc__ = f"Deprecated camelCase alias of :meth:`{new}`."
+    return wrapper
 
 
 class InferenceSession:
     def __init__(self, artifact_dir: str):
-        self.runtime = Runtime(artifact_dir)
-        m = self.runtime.manifest
-        self.seq_len = int(m["signature"]["inputs"][0]["shape"][1])
-        self.vocab_size = int(m["signature"]["outputs"][0]["shape"][2])
-        self.has_ages = any(i["name"] == "ages"
-                            for i in m["signature"]["inputs"])
-        samp = m.get("sampling", {}).get("termination", {})
-        self.death_token = int(samp.get("death_token", 1))
-        self.max_age = float(samp.get("max_age_years", 85.0))
-
-    # -- tensor creation ------------------------------------------------------
-    def _make_inputs(self, tokens: Sequence[int],
-                     ages: Optional[Sequence[float]]):
-        S = self.seq_len
-        if len(tokens) == 0:
-            raise ValueError("empty trajectory: pass at least one event token")
-        if len(tokens) > S:
-            raise ValueError(f"trajectory longer than graph axis ({S})")
-        t = np.zeros((1, S), np.int32)
-        t[0, :len(tokens)] = tokens
-        if not self.has_ages:
-            return (t,)
-        if ages is None:
-            raise ValueError("this artifact's signature declares an 'ages' "
-                             "input: pass ages alongside tokens")
-        if len(ages) != len(tokens):
-            raise ValueError(f"ages/tokens length mismatch: "
-                             f"{len(ages)} vs {len(tokens)}")
-        a = np.zeros((1, S), np.float32)
-        a[0, :len(ages)] = ages
-        if len(ages):
-            a[0, len(ages):] = ages[-1]
-        return t, a
+        # local import: repro.api pulls model code; keeping it out of module
+        # scope avoids an import cycle through repro.sdk.__init__
+        from repro.api.client import ArtifactBackend, Client
+        self.client = Client(
+            ArtifactBackend(artifact_dir, use_decode_graph=False))
+        backend = self.client.backend
+        self.runtime = backend.runtime
+        self.seq_len = backend.seq_len
+        self.vocab_size = backend.vocab_size
+        self.has_ages = backend.has_ages
+        self.death_token = backend.death_token
+        self.max_age = backend.max_age
 
     # -- execution ------------------------------------------------------------
     def get_logits(self, tokens: Sequence[int],
                    ages: Optional[Sequence[float]] = None) -> np.ndarray:
         """Logits for the *next* event given the trajectory so far: (V,)."""
-        inputs = self._make_inputs(tokens, ages)
-        logits = self.runtime.run(*inputs)          # (1, S, V)
-        return logits[0, len(tokens) - 1]
-
-    getLogits = get_logits                           # paper SDK naming
+        return self.client.backend.logits(tokens, ages)
 
     # -- post-processing (eq. 1 sampling, host-side) ---------------------------
     def generate_trajectory(self, tokens: Sequence[int],
@@ -78,36 +70,12 @@ class InferenceSession:
                             uniforms: Optional[np.ndarray] = None
                             ) -> Dict[str, List]:
         """Iterative client-side generation (the App's right-hand panel)."""
-        max_age = self.max_age if max_age is None else max_age
-        death = self.death_token if death_token is None else death_token
-        rng = rng or np.random.default_rng(0)
-        toks = list(tokens)
-        ags = [float(a) for a in ages]
-        new_toks: List[int] = []
-        new_ages: List[float] = []
-        for i in range(max_new):
-            if len(toks) >= self.seq_len:
-                break
-            logits = self.get_logits(toks, ags).astype(np.float64)
-            u = (uniforms[i] if uniforms is not None
-                 else rng.uniform(size=self.vocab_size))
-            u = np.clip(u, 1e-12, 1 - 1e-12)
-            t = -np.exp(-logits) * np.log(u)        # paper eq. 1
-            evt = int(np.argmin(t))
-            t_min = float(t[evt])
-            age = ags[-1] + t_min
-            if age > max_age:
-                break
-            toks.append(evt)
-            ags.append(age)
-            new_toks.append(evt)
-            new_ages.append(age)
-            if evt == death:
-                break
-        return {"tokens": new_toks, "ages": new_ages,
-                "full_tokens": toks, "full_ages": ags}
-
-    generateTrajectory = generate_trajectory         # paper SDK naming
+        from repro.api.schemas import GenerateRequest
+        res = self.client.generate(GenerateRequest(
+            tokens=tokens, ages=ages, max_new=max_new, max_age=max_age,
+            death_token=death_token, uniforms=uniforms, rng=rng))
+        return {"tokens": res.tokens, "ages": res.ages,
+                "full_tokens": res.full_tokens, "full_ages": res.full_ages}
 
     # -- morbidity-risk estimates (the App's displayed output) -----------------
     def estimate_risk(self, tokens: Sequence[int], ages: Sequence[float], *,
@@ -117,12 +85,12 @@ class InferenceSession:
         P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
         Returns the ``top`` risks as {token, risk} dicts, highest first.
         """
-        logits = self.get_logits(tokens, ages).astype(np.float64)
-        log_rate = np.logaddexp.reduce(logits)
-        frac = np.exp(logits - log_rate)
-        p_any = 1.0 - np.exp(-np.exp(log_rate) * horizon)
-        risk = frac * p_any
-        order = np.argsort(-risk)[:top]
-        return [{"token": int(i), "risk": float(risk[i])} for i in order]
+        return self.client.risk(tokens, ages, horizon=horizon,
+                                top=top).as_dicts()
 
-    estimateRisk = estimate_risk
+    # paper SDK naming — deprecated camelCase aliases
+    getLogits = _deprecated_alias("getLogits", "get_logits", get_logits)
+    generateTrajectory = _deprecated_alias(
+        "generateTrajectory", "generate_trajectory", generate_trajectory)
+    estimateRisk = _deprecated_alias("estimateRisk", "estimate_risk",
+                                     estimate_risk)

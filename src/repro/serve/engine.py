@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, NamedTuple, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +45,8 @@ from repro.configs import base as cb
 from repro.configs.base import ModelConfig
 from repro.core.sampler import advance_trajectory_state, sample_next_event
 from repro.kernels import tte_sample
-from repro.models import (LayerCache, decode_step, forward, make_decode_cache)
+from repro.models import (decode_step, forward, make_decode_cache,
+                          mask_padded_positions)
 
 # Module-level so tests can monkeypatch/count device->host transfers: this is
 # the ONLY way the engine moves data off-device.
@@ -61,6 +62,11 @@ class Request:
     # SDK/engine bit-parity tests (claims C2/C3).  Row i is consumed by the
     # i-th sampled event (row 0 at admission, from the prefill logits).
     uniforms: Optional[np.ndarray] = None
+    # streaming hooks (repro.api.EngineBackend.stream): invoked on the host
+    # side of the tick sync — on_event(token, age_or_None) per emitted event,
+    # on_done(request) once at termination
+    on_event: Optional[Callable[[int, Optional[float]], None]] = None
+    on_done: Optional[Callable[["Request"], None]] = None
     # filled by the engine:
     out_tokens: Optional[List[int]] = None
     out_ages: Optional[List[float]] = None
@@ -157,7 +163,7 @@ def _prefill_core(params, tokens, ages, last_idx, age0, lengths, max_new, u,
         batch["ages"] = ages
     out = forward(params, cfg, batch, mode="prefill",
                   cache_width=kn.max_context, last_index=last_idx)
-    cache_rows = _mask_padded_positions(out["cache"], last_idx)
+    cache_rows = mask_padded_positions(out["cache"], last_idx)
     lg = out["logits"][:, 0].astype(jnp.float32)
     nb = tokens.shape[0]
     active = jnp.ones((nb,), bool)
@@ -366,10 +372,14 @@ class BatchedEngine:
             req.out_tokens.append(int(evt))
             if self.is_delphi:
                 req.out_ages.append(float(age))
+            if req.on_event is not None:
+                req.on_event(int(evt), float(age) if self.is_delphi else None)
         if finished >= 0.5:
             req.done = True
             self.completed.append(req)
             self.slot_req[slot] = None
+            if req.on_done is not None:
+                req.on_done(req)
 
     # -- the tick ------------------------------------------------------------
     def step(self) -> bool:
@@ -407,25 +417,6 @@ class BatchedEngine:
             self.step()
             ticks += 1
         return self.completed
-
-
-def _mask_padded_positions(cache, last_idx):
-    """Invalidate ring-cache positions past each example's true last token.
-
-    Right-padded bucketed prefill writes garbage K/V at positions
-    ``len..bucket-1``; setting their ``pos`` to -1 makes ``decode_attention``
-    mask them until real decode writes reclaim the slots one position at a
-    time.  Non-attention cache components (SSM state) pass through — the
-    engine only buckets pure-attention architectures.
-    """
-    li = jnp.asarray(last_idx).reshape((1, -1, 1))
-
-    def fix(v):
-        if isinstance(v, LayerCache):
-            return v._replace(
-                pos=jnp.where((v.pos >= 0) & (v.pos <= li), v.pos, -1))
-        return v
-    return {k: fix(v) for k, v in cache.items()}
 
 
 # ===========================================================================

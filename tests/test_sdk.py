@@ -26,7 +26,8 @@ def artifact(tmp_path_factory):
 
 def test_files_and_checksums(artifact):
     d, _, _ = artifact
-    assert sorted(os.listdir(d)) == ["manifest.json", "model.bin", "params.npz"]
+    assert sorted(os.listdir(d)) == ["decode.bin", "manifest.json",
+                                     "model.bin", "params.npz", "prefill.bin"]
     assert verify_checksums(d)
 
 
