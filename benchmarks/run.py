@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     (interpret-mode CPU proxy) vs jnp oracle
   train_step_delphi                 dual-loss training throughput, tokens/s
   serving_engine_batched            slot continuous batching end-to-end
+  http_generate_p50/p95             wire-protocol serving: concurrent
+                                    RemoteBackend clients vs the threaded
+                                    HTTP front-end (req/s + latency tails)
   roofline_*                        derived = dominant roofline term (reads
                                     experiments/dryrun; skipped when absent)
 
@@ -258,6 +261,82 @@ def bench_serving_engine():
          f"device-resident vs seed")
 
 
+def bench_http():
+    """End-to-end wire-protocol serving: N concurrent RemoteBackend clients
+    against the threaded HTTP front-end over a background-ticking engine —
+    requests/s plus p50/p95 request latency, the numbers that sit alongside
+    the in-process `serve`/`sdk` rows to show what the network hop and
+    admission queueing cost."""
+    import threading
+
+    from repro.api import Client
+    from repro.api.client import EngineBackend
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.server import InferenceServer
+
+    cfg = get_config("delphi-2m", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend.create(params, cfg, slots=8, max_context=128)
+    server = InferenceServer(backend, port=0).start()
+    try:
+        n_clients, per_client, max_new = 4, 6, 12
+        toks = list(range(3, 9))
+        ages = np.linspace(0, 30, 6).tolist()
+        # warm: compiles (tick + the batch-bucketed prefill shapes a
+        # concurrent burst admits under) land outside the clock
+        from repro.api import GenerateRequest
+        warm = Client.connect(server.address)
+        warm.generate(tokens=toks, ages=ages, max_new=max_new)
+        for nb in (2, n_clients):       # power-of-two admission batch buckets
+            warm.generate_batch([GenerateRequest(tokens=toks, ages=ages,
+                                                 max_new=2)
+                                 for _ in range(nb)])
+
+        lat: list = []
+        failures: list = []
+        lock = threading.Lock()
+
+        def worker(i):
+            try:
+                client = Client.connect(server.address)
+                for j in range(per_client):
+                    t0 = time.perf_counter()
+                    out = client.generate(tokens=toks, ages=ages,
+                                          max_new=max_new)
+                    dt = time.perf_counter() - t0
+                    with lock:
+                        lat.append((dt, len(out.tokens)))
+            except Exception as e:          # noqa: BLE001 — surface after join
+                with lock:
+                    failures.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+    finally:
+        server.stop()
+    if failures:
+        raise RuntimeError(
+            f"http benchmark: {len(failures)} worker(s) failed "
+            f"({len(lat)} requests completed): {failures[0]}")
+
+    n = len(lat)
+    times = np.asarray([d for d, _ in lat])
+    ev = sum(k for _, k in lat)
+    p50, p95 = np.percentile(times, 50), np.percentile(times, 95)
+    _row("http_generate_p50", p50 * 1e6,
+         f"{n / wall:.1f} req/s, {ev / wall:.1f} events/s "
+         f"({n_clients} concurrent clients)")
+    _row("http_generate_p95", p95 * 1e6,
+         f"{n} requests end-to-end over HTTP (engine async admission)")
+
+
 def bench_calibration():
     """Delphi-style evaluation: generated cohort vs held-out cohort stats."""
     from repro.configs import get_config
@@ -305,6 +384,7 @@ BENCHES = {
     "tte": bench_tte_kernel,
     "train": bench_train_step,
     "serve": bench_serving_engine,
+    "http": bench_http,
     "calibration": bench_calibration,
     "roofline": bench_roofline,
 }

@@ -1,0 +1,68 @@
+"""End-to-end wire-protocol serving: the App's client/server split, live.
+
+Boots the HTTP/SSE front-end over an engine backend (async admission: the
+engine ticks on a background thread while handler threads enqueue), then
+talks to it exactly the way the paper's thin JS SDK would — generate,
+per-event SSE streaming, and the closed-form risk panel — through
+``Client.connect(url)``, the fourth pluggable backend.
+
+Run:  PYTHONPATH=src python examples/serve_http.py [--port 8478]
+(--port 0 picks an ephemeral port; the server is torn down at the end.
+ To keep one running instead, use the `repro-serve` CLI.)
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.api import Client
+from repro.api.client import EngineBackend
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.data import vocab as V
+from repro.serve.server import InferenceServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config("delphi-2m", reduced=True).replace(dtype="float32")
+    params = init_delphi(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend.create(params, cfg, slots=args.slots,
+                                   max_context=128)
+    server = InferenceServer(backend, port=args.port).start()
+    print(f"== serving {backend.name} backend at {server.address} ==")
+
+    client = Client.connect(server.address)
+    m = client.backend.server_manifest
+    print(f"manifest: wire v{m['protocol_version']}, "
+          f"vocab={m['model']['vocab_size']}, "
+          f"max_age={m['model']['max_age']}")
+
+    toks = [V.SEX_MALE, V.LIFESTYLE0 + 2, V.DISEASE0 + 40]
+    ages = [0.0, 30.0, 45.2]
+
+    print("\n== POST /v1/generate ==")
+    res = client.generate(tokens=toks, ages=ages, max_new=12)
+    for t, a in zip(res.tokens, res.ages):
+        print(f"  age {a:5.1f}  {V.code_name(t)}")
+
+    print("\n== POST /v1/stream (SSE, event per engine tick) ==")
+    for ev in client.stream(tokens=toks, ages=ages, max_new=8):
+        print(f"  [{ev.index}] age {ev.age:5.1f}  {V.code_name(ev.token)}")
+
+    print("\n== POST /v1/risk (the App's left-hand panel) ==")
+    rep = client.risk(toks, ages, horizon=5.0, top=5)
+    for it in rep.items:
+        print(f"  {it.risk:6.4f}  {V.code_name(it.token)}")
+
+    print(f"\nhealthz: {client.backend.healthz()}")
+    server.stop()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

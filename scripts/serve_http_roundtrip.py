@@ -1,0 +1,114 @@
+"""CI guard: boot the HTTP front-end and round-trip the wire protocol.
+
+The cross-process counterpart of ``scripts/artifact_roundtrip.py``: export a
+tiny delphi-2m artifact, serve it through ``repro.serve.server`` on an
+ephemeral port, and drive generate / stream / risk through
+``Client(RemoteBackend(url))``, asserting
+
+* trajectories over the wire are **bit-identical** to ``LocalBackend`` under
+  injected uniforms (tokens exact; uniforms cross as base64 raw bytes),
+* SSE streaming yields exactly the same events as non-streaming generate,
+* every ``_validate`` failure surfaces as a structured JSON error with its
+  stable code over HTTP.
+
+Run:  PYTHONPATH=src python scripts/serve_http_roundtrip.py
+"""
+import json
+import sys
+import tempfile
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+
+from repro.api import ApiError, Client, GenerateRequest
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.sdk import export_model
+from repro.serve.server import InferenceServer
+
+
+def _post_raw(url, path, payload):
+    req = urllib.request.Request(
+        url + path, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def main() -> int:
+    # same known-stable constants as the test_api parity fixture
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=96, max_seq_len=48, max_age=1e9)
+    params = init_delphi(cfg, jax.random.PRNGKey(7))
+    d = tempfile.mkdtemp(prefix="ci_http_artifact_")
+    export_model(params, cfg, d)
+
+    toks, ages = [3, 10, 20], [0.0, 15.0, 28.0]
+    max_new = 6
+    u = np.random.default_rng(42).uniform(
+        size=(max_new, cfg.vocab_size)).astype(np.float32)
+
+    local = Client.from_params(params, cfg)
+    ref = local.generate(tokens=toks, ages=ages, max_new=max_new, uniforms=u)
+    assert len(ref.tokens) > 0
+
+    server = InferenceServer(Client.from_artifact(d).backend, port=0).start()
+    try:
+        remote = Client.connect(server.address)
+
+        # 1) bit-identical generation across the wire
+        res = remote.generate(tokens=toks, ages=ages, max_new=max_new,
+                              uniforms=u)
+        assert res.tokens == ref.tokens, \
+            f"remote tokens {res.tokens} != local {ref.tokens}"
+        assert res.backend == "remote[artifact]"
+
+        # 2) SSE stream == generate, event for event
+        evs = list(remote.stream(tokens=toks, ages=ages, max_new=max_new,
+                                 uniforms=u))
+        assert [e.token for e in evs] == res.tokens, \
+            f"SSE {[e.token for e in evs]} != generate {res.tokens}"
+        assert [e.index for e in evs] == list(range(len(res.tokens)))
+
+        # 3) risk over the wire matches the local closed form
+        rl = local.risk(toks, ages, horizon=5.0, top=8)
+        rr = remote.risk(toks, ages, horizon=5.0, top=8)
+        assert [i.token for i in rr.items] == [i.token for i in rl.items]
+        np.testing.assert_allclose([i.risk for i in rr.items],
+                                   [i.risk for i in rl.items], rtol=1e-5)
+
+        # 4) every validation failure -> stable JSON error code over HTTP
+        cases = [
+            ({"tokens": [], "ages": []}, 400, "empty_trajectory"),
+            ({"tokens": list(range(100)), "ages": [0.0] * 100}, 400,
+             "too_long"),
+            ({"tokens": toks}, 400, "ages_required"),
+            ({"tokens": toks, "ages": [0.0]}, 400, "ages_length_mismatch"),
+            ({"protocol_version": "999", "tokens": toks, "ages": ages}, 409,
+             "protocol_version_mismatch"),
+        ]
+        for payload, want_status, want_code in cases:
+            status, body = _post_raw(server.address, "/v1/generate", payload)
+            assert (status, body["error"]["code"]) == \
+                (want_status, want_code), (payload, status, body)
+            try:
+                remote.generate(GenerateRequest.from_json(dict(payload)))
+                raise AssertionError(f"no error for {payload}")
+            except ApiError as e:
+                assert e.code == want_code, (payload, e.code)
+
+        print(f"OK http round-trip: {len(res.tokens)} events bit-identical "
+              f"local vs RemoteBackend (generate + SSE), risk parity, "
+              f"{len(cases)} error codes mapped")
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

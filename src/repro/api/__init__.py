@@ -1,16 +1,27 @@
 """Unified inference client API (the paper's SDK surface, backend-pluggable).
 
-``Client`` + three backends (artifact / engine / local) over shared request
-and result schemas — see ``repro.api.client`` for the design notes.
+``Client`` + four backends — artifact / engine / local in-process, plus
+``RemoteBackend`` speaking the versioned JSON/SSE wire protocol against a
+``repro.serve.server`` — over shared request/result schemas and one
+structured error taxonomy.  See ``repro.api.client`` for the design notes.
 """
 from repro.api.client import (ArtifactBackend, Client, EngineBackend,
                               InferenceBackend, LocalBackend)
-from repro.api.schemas import (GenerateRequest, RiskItem, RiskReport,
-                               TrajectoryEvent, TrajectoryResult)
+from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
+                              ApiError, EmptyTrajectoryError,
+                              ProtocolVersionError, RngNotSerializableError,
+                              TooLongError, error_from_code, error_from_json)
+from repro.api.remote import RemoteBackend
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
+                               RiskItem, RiskReport, TrajectoryEvent,
+                               TrajectoryResult)
 
 __all__ = [
     "Client", "InferenceBackend",
-    "ArtifactBackend", "EngineBackend", "LocalBackend",
+    "ArtifactBackend", "EngineBackend", "LocalBackend", "RemoteBackend",
     "GenerateRequest", "TrajectoryEvent", "TrajectoryResult",
-    "RiskItem", "RiskReport",
+    "RiskItem", "RiskReport", "WIRE_PROTOCOL_VERSION",
+    "ApiError", "EmptyTrajectoryError", "TooLongError", "AgesRequiredError",
+    "AgesLengthMismatchError", "RngNotSerializableError",
+    "ProtocolVersionError", "error_from_code", "error_from_json",
 ]

@@ -16,6 +16,9 @@ so trajectories are bit-comparable across backends under injected uniforms:
 * :class:`LocalBackend` — in-process params + ``core.sampler`` (in-graph
   batched generation; streaming via the same prefill/decode functions the
   exporter serializes).
+* :class:`repro.api.remote.RemoteBackend` — the same surface over the
+  versioned JSON/SSE wire protocol against a ``repro.serve.server`` — the
+  network as a fourth pluggable backend (``Client.connect(url)``).
 
 ``sdk.InferenceSession`` is a thin compatibility shim over ``Client``.
 """
@@ -33,6 +36,9 @@ from repro.configs.base import ModelConfig
 from repro.core.risk import analytic_next_event_risk_np
 from repro.core.sampler import sample_next_event_np
 from repro.sdk.runtime import Runtime
+from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
+                              EmptyTrajectoryError, InvalidRequestError,
+                              TooLongError, UnsupportedOverrideError)
 from repro.api.schemas import (GenerateRequest, RiskItem, RiskReport,
                                TrajectoryEvent, TrajectoryResult)
 
@@ -50,7 +56,9 @@ class InferenceBackend:
     Subclasses set ``name``, ``seq_len``, ``vocab_size``, ``has_ages``,
     ``max_age``, ``death_token`` and implement ``logits`` plus either
     ``_event_stream`` (host-loop backends) or override ``generate`` /
-    ``stream`` directly.
+    ``stream`` directly.  Concrete subclasses self-register by ``name``
+    (``InferenceBackend.registry``) — how ``repro.api`` knows its four
+    backends (artifact / engine / local / remote) without hard-coding them.
     """
     name = "abstract"
     seq_len: int
@@ -59,22 +67,50 @@ class InferenceBackend:
     max_age: float
     death_token: int
 
-    # -- validation (error contract shared with the legacy SDK) -------------
+    registry: dict = {}
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        name = cls.__dict__.get("name")
+        if name and name != "abstract":
+            InferenceBackend.registry[name] = cls
+
+    # -- validation (structured error taxonomy; every error is a ValueError
+    #    subclass, so the legacy SDK contract still holds) -------------------
     def _validate(self, tokens: Sequence[int],
                   ages: Optional[Sequence[float]]) -> None:
         if len(tokens) == 0:
-            raise ValueError("empty trajectory: pass at least one event token")
+            raise EmptyTrajectoryError(
+                "empty trajectory: pass at least one event token")
         if len(tokens) > self.seq_len:
-            raise ValueError(f"trajectory longer than graph axis "
-                             f"({self.seq_len})")
+            raise TooLongError(f"trajectory longer than graph axis "
+                               f"({self.seq_len})")
         if self.has_ages:
             if ages is None:
-                raise ValueError(
+                raise AgesRequiredError(
                     "this model's signature declares an 'ages' input: pass "
                     "ages alongside tokens")
             if len(ages) != len(tokens):
-                raise ValueError(f"ages/tokens length mismatch: "
-                                 f"{len(ages)} vs {len(tokens)}")
+                raise AgesLengthMismatchError(
+                    f"ages/tokens length mismatch: "
+                    f"{len(ages)} vs {len(tokens)}")
+
+    def _validate_request(self, req: GenerateRequest) -> None:
+        """Full request validation: trajectory inputs + the uniforms
+        contract (row i feeds sampled event i, so the array must cover
+        max_new rows at the backend's vocab width).  Catching a bad shape
+        here keeps it a structured 400 instead of an IndexError inside a
+        backend loop — on the engine, one short array would otherwise fail
+        every in-flight request."""
+        self._validate(req.tokens, req.ages)
+        if req.uniforms is not None:
+            u = np.asarray(req.uniforms)
+            if u.ndim != 2 or u.shape[0] < req.max_new \
+                    or u.shape[1] != self.vocab_size:
+                raise InvalidRequestError(
+                    f"uniforms must have shape (>= max_new, vocab_size) = "
+                    f"(>= {req.max_new}, {self.vocab_size}); got "
+                    f"{tuple(u.shape)}")
 
     def _pad_inputs(self, tokens: Sequence[int],
                     ages: Optional[Sequence[float]]) -> Tuple[np.ndarray, ...]:
@@ -137,6 +173,26 @@ class InferenceBackend:
                 yield TrajectoryEvent(index=n, token=evt)
                 n += 1
 
+    def _prefill_decode_stepper(self, prefill, decode):
+        """One prefill-then-decode state machine for every backend that owns
+        a (prefill, decode) pair — the artifact runtime's deserialized
+        graphs and LocalBackend's jits of the very functions the exporter
+        serializes.  ``prefill(padded_inputs, last_index) -> (logits (1, V),
+        cache)``; ``decode(cache, token, age_or_None, step) -> (logits
+        (1, V), cache)``.
+        """
+        def next_fn(toks, ags, state):
+            if state is None:
+                inputs = self._pad_inputs(toks,
+                                          ags if self.has_ages else None)
+                lg, cache = prefill(inputs, len(toks) - 1)
+                return np.asarray(lg)[0], (cache, len(toks))
+            cache, step = state
+            lg, cache = decode(cache, toks[-1],
+                               ags[-1] if self.has_ages else None, step)
+            return np.asarray(lg)[0], (cache, step + 1)
+        return next_fn
+
     def _result(self, req: GenerateRequest,
                 events: List[TrajectoryEvent]) -> TrajectoryResult:
         return TrajectoryResult(
@@ -157,7 +213,7 @@ class InferenceBackend:
         raise NotImplementedError
 
     def stream(self, req: GenerateRequest) -> Iterator[TrajectoryEvent]:
-        self._validate(req.tokens, req.ages)
+        self._validate_request(req)
         return self._event_stream(req)
 
     def generate(self, req: GenerateRequest) -> TrajectoryResult:
@@ -166,6 +222,24 @@ class InferenceBackend:
     def generate_batch(self, reqs: Sequence[GenerateRequest]
                        ) -> List[TrajectoryResult]:
         return [self.generate(r) for r in reqs]
+
+    def risk(self, tokens: Sequence[int],
+             ages: Optional[Sequence[float]] = None, *,
+             horizon: float = 5.0, top: int = 10) -> RiskReport:
+        """Closed-form within-horizon next-event risks, highest first.
+
+        P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
+        Backend-level (not on ``Client``) so remote backends can answer on
+        the server, where the logits live.
+        """
+        lg = self.logits(tokens, ages)
+        risk = analytic_next_event_risk_np(lg, horizon)
+        order = np.argsort(-risk)[:top]
+        return RiskReport(
+            horizon=horizon,
+            items=[RiskItem(token=int(i), risk=float(risk[i]))
+                   for i in order],
+            backend=self.name)
 
 
 # ---------------------------------------------------------------------------
@@ -209,22 +283,23 @@ class ArtifactBackend(InferenceBackend):
     def _next_full(self, toks, ags, state):
         return self.logits(toks, ags if self.has_ages else None), None
 
-    def _next_decode(self, toks, ags, state):
-        if state is None:
-            inputs = self._pad_inputs(toks, ags if self.has_ages else None)
-            last = np.asarray([len(toks) - 1], np.int32)
-            lg, cache = self.runtime.prefill(*inputs, last)
-            return lg[0], (cache, len(toks))
-        cache, step = state
-        args: List[np.ndarray] = [np.asarray([[toks[-1]]], np.int32)]
-        if self.has_ages:
-            args.append(np.asarray([[ags[-1]]], np.float32))
-        args.append(np.asarray([step], np.int32))
-        lg, cache = self.runtime.decode_step(cache, *args)
-        return lg[0], (cache, step + 1)
+    def _next_decode_fn(self):
+        def prefill(inputs, last):
+            return self.runtime.prefill(*inputs,
+                                        np.asarray([last], np.int32))
+
+        def decode(cache, token, age, step):
+            args: List[np.ndarray] = [np.asarray([[token]], np.int32)]
+            if age is not None:
+                args.append(np.asarray([[age]], np.float32))
+            args.append(np.asarray([step], np.int32))
+            return self.runtime.decode_step(cache, *args)
+
+        return self._prefill_decode_stepper(prefill, decode)
 
     def _event_stream(self, req):
-        step_fn = self._next_decode if self.use_decode_graph else self._next_full
+        step_fn = (self._next_decode_fn() if self.use_decode_graph
+                   else self._next_full)
         return self._host_events(req, step_fn)
 
 
@@ -267,22 +342,22 @@ class LocalBackend(InferenceBackend):
         out = np.asarray(self._full(self.params, *inputs))
         return out[0, len(tokens) - 1]
 
-    def _next_decode(self, toks, ags, state):
-        if state is None:
-            inputs = self._pad_inputs(toks, ags if self.has_ages else None)
-            last = jnp.asarray([len(toks) - 1], jnp.int32)
-            lg, cache = self._prefill(self.params, *inputs, last)
-            return np.asarray(lg)[0], (cache, len(toks))
-        cache, step = state
-        args: List = [jnp.asarray([[toks[-1]]], jnp.int32)]
-        if self.has_ages:
-            args.append(jnp.asarray([[ags[-1]]], jnp.float32))
-        args.append(jnp.asarray([step], jnp.int32))
-        lg, cache = self._decode(self.params, list(cache), *args)
-        return np.asarray(lg)[0], (cache, step + 1)
+    def _next_decode_fn(self):
+        def prefill(inputs, last):
+            return self._prefill(self.params, *inputs,
+                                 jnp.asarray([last], jnp.int32))
+
+        def decode(cache, token, age, step):
+            args: List = [jnp.asarray([[token]], jnp.int32)]
+            if age is not None:
+                args.append(jnp.asarray([[age]], jnp.float32))
+            args.append(jnp.asarray([step], jnp.int32))
+            return self._decode(self.params, list(cache), *args)
+
+        return self._prefill_decode_stepper(prefill, decode)
 
     def _event_stream(self, req):
-        return self._host_events(req, self._next_decode)
+        return self._host_events(req, self._next_decode_fn())
 
     def generate(self, req: GenerateRequest) -> TrajectoryResult:
         # host decode loop for generic LMs (no eq.-1 in-graph generator) and
@@ -290,7 +365,7 @@ class LocalBackend(InferenceBackend):
         # which would silently ignore req.rng)
         if not self.has_ages or req.rng is not None:
             return super().generate(req)
-        self._validate(req.tokens, req.ages)
+        self._validate_request(req)
         max_age, death = self._term(req)
         S0 = len(req.tokens)
         t = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
@@ -330,8 +405,18 @@ class EngineBackend(InferenceBackend):
     into the engine's compiled tick at construction, so per-request overrides
     raise instead of being silently ignored — build the engine from a
     ``cfg.replace(...)`` to change them.
+
+    Works in two modes: *foreground* (this thread drives ``engine.run()`` /
+    ``engine.step()`` — the library default) and *background* (the engine is
+    ticking on its own thread via ``engine.start()``, as under the HTTP
+    front-end — requests are enqueued and this thread blocks on the
+    request's completion hooks, so many handler threads share one engine).
     """
     name = "engine"
+
+    #: background mode: max seconds to wait for the loop thread to finish a
+    #: submitted request before failing it with a structured timeout
+    request_timeout: float = 300.0
 
     def __init__(self, engine: BatchedEngine):
         self.engine = engine
@@ -352,22 +437,35 @@ class EngineBackend(InferenceBackend):
 
     def _check_overrides(self, req: GenerateRequest) -> None:
         if req.max_age is not None and req.max_age != self.max_age:
-            raise ValueError(
+            raise UnsupportedOverrideError(
                 f"EngineBackend termination is compiled into the tick: "
                 f"requested max_age={req.max_age} but the engine was built "
                 f"with {self.max_age} — construct the engine from "
                 f"cfg.replace(max_age=...)")
         if req.death_token is not None and req.death_token != self.death_token:
-            raise ValueError(
+            raise UnsupportedOverrideError(
                 f"EngineBackend death_token is fixed at construction "
                 f"({self.death_token}); got {req.death_token}")
         if req.rng is not None:
-            raise ValueError("EngineBackend samples in-graph: pass `uniforms`"
-                             " for determinism, or seed the engine")
+            raise UnsupportedOverrideError(
+                "EngineBackend samples in-graph: pass `uniforms` for "
+                "determinism, or seed the engine")
+        if req.uniforms is None and req.seed != 0:
+            raise UnsupportedOverrideError(
+                f"EngineBackend draws from the engine's construction-time "
+                f"PRNG stream; per-request seed={req.seed} would be "
+                f"silently ignored — inject `uniforms`, or build the "
+                f"engine with seed=...")
 
     def _engine_request(self, req: GenerateRequest, **kw) -> "EngineRequest":
-        self._validate(req.tokens, req.ages)
+        self._validate_request(req)
         self._check_overrides(req)
+        return self._build_engine_request(req, **kw)
+
+    def _build_engine_request(self, req: GenerateRequest, **kw
+                              ) -> "EngineRequest":
+        """Construction only — callers that validated already (the eager
+        ``stream`` wrapper) skip the second pass."""
         from repro.serve.engine import Request as EngineRequest
         return EngineRequest(
             tokens=np.asarray(req.tokens, np.int32),
@@ -391,37 +489,67 @@ class EngineBackend(InferenceBackend):
                                           jnp.asarray(t), jnp.asarray(a)))
         return out[0, len(tokens) - 1]
 
+    def _finish(self, req: GenerateRequest, er: "EngineRequest"
+                ) -> TrajectoryResult:
+        if er.error is not None:
+            raise er.error
+        if not er.done:
+            raise RuntimeError("engine stopped before completing the "
+                               "request (max_ticks exhausted?)")
+        return TrajectoryResult(
+            tokens=list(er.out_tokens),
+            ages=[float(a) for a in er.out_ages],
+            prompt_tokens=[int(t) for t in req.tokens],
+            prompt_ages=([float(a) for a in req.ages]
+                         if req.ages is not None else []),
+            backend=self.name)
+
     def generate_batch(self, reqs: Sequence[GenerateRequest]
                        ) -> List[TrajectoryResult]:
         pairs = [(r, self._engine_request(r)) for r in reqs]
-        for _, er in pairs:
-            self.engine.submit(er)
-        self.engine.run()
-        results = []
-        for req, er in pairs:
-            if not er.done:
-                raise RuntimeError("engine stopped before completing the "
-                                   "request (max_ticks exhausted?)")
-            results.append(TrajectoryResult(
-                tokens=list(er.out_tokens),
-                ages=[float(a) for a in er.out_ages],
-                prompt_tokens=[int(t) for t in req.tokens],
-                prompt_ages=([float(a) for a in req.ages]
-                             if req.ages is not None else []),
-                backend=self.name))
-        return results
+        if self.engine.running:
+            # background mode: the loop thread ticks; park on completion
+            import threading
+            from repro.api.errors import RequestTimeoutError
+            waits = []
+            for _, er in pairs:
+                evt = threading.Event()
+                er.on_done = lambda _r, _evt=evt: _evt.set()
+                waits.append(evt)
+            for _, er in pairs:
+                self.engine.submit(er)
+            for evt in waits:
+                if not evt.wait(self.request_timeout):
+                    raise RequestTimeoutError(
+                        f"engine did not complete the request within "
+                        f"{self.request_timeout}s")
+        else:
+            for _, er in pairs:
+                self.engine.submit(er)
+            self.engine.run()
+        return [self._finish(req, er) for req, er in pairs]
 
     def generate(self, req: GenerateRequest) -> TrajectoryResult:
         return self.generate_batch([req])[0]
 
     def stream(self, req: GenerateRequest) -> Iterator[TrajectoryEvent]:
+        # non-generator wrapper so validation raises HERE, like the other
+        # backends — not lazily at the consumer's first next()
+        self._validate_request(req)
+        self._check_overrides(req)
+        if self.engine.running:
+            return self._stream_background(req)
+        return self._stream_foreground(req)
+
+    def _stream_foreground(self, req: GenerateRequest
+                           ) -> Iterator[TrajectoryEvent]:
         events: List[TrajectoryEvent] = []
 
         def on_event(token: int, age: Optional[float]) -> None:
             events.append(TrajectoryEvent(index=len(events), token=token,
                                           age=age))
 
-        er = self._engine_request(req, on_event=on_event)
+        er = self._build_engine_request(req, on_event=on_event)
         self.engine.submit(er)
         drained = 0
         while not er.done:
@@ -436,6 +564,40 @@ class EngineBackend(InferenceBackend):
             yield events[drained]
             drained += 1
 
+    def _stream_background(self, req: GenerateRequest
+                           ) -> Iterator[TrajectoryEvent]:
+        """Per-event streaming off a background-ticking engine: the loop
+        thread pushes events through a queue as its tick sync lands."""
+        import queue
+        from repro.api.errors import RequestTimeoutError
+        q: "queue.Queue" = queue.Queue()
+        n_seen = [0]
+
+        def on_event(token: int, age: Optional[float]) -> None:
+            q.put(("event", TrajectoryEvent(index=n_seen[0], token=token,
+                                            age=age)))
+            n_seen[0] += 1
+
+        def on_done(er: "EngineRequest") -> None:
+            q.put(("done", er))
+
+        er = self._build_engine_request(req, on_event=on_event,
+                                        on_done=on_done)
+        self.engine.submit(er)
+        while True:
+            try:
+                kind, payload = q.get(timeout=self.request_timeout)
+            except queue.Empty:
+                raise RequestTimeoutError(
+                    f"engine produced no event within "
+                    f"{self.request_timeout}s") from None
+            if kind == "event":
+                yield payload
+            else:
+                if payload.error is not None:
+                    raise payload.error
+                return
+
 
 # ---------------------------------------------------------------------------
 # The facade
@@ -447,6 +609,7 @@ class Client:
     >>> client = Client.from_artifact("/path/to/artifact")   # FAIR client
     >>> client = Client.from_params(params, cfg)             # in-process
     >>> client = Client.serving(params, cfg, slots=8)        # batched engine
+    >>> client = Client.connect("http://host:8478")          # over the wire
     """
 
     def __init__(self, backend: InferenceBackend):
@@ -468,6 +631,17 @@ class Client:
     @classmethod
     def serving(cls, params, cfg: ModelConfig, **engine_kwargs) -> "Client":
         return cls(EngineBackend.create(params, cfg, **engine_kwargs))
+
+    @classmethod
+    def connect(cls, url: str, **kw) -> "Client":
+        """The fourth backend: a ``repro.serve.server`` across the network."""
+        from repro.api.remote import RemoteBackend
+        return cls(RemoteBackend(url, **kw))
+
+    @staticmethod
+    def backends() -> dict:
+        """Registered backend name -> class (artifact/engine/local/remote)."""
+        return dict(InferenceBackend.registry)
 
     # -- request plumbing ----------------------------------------------------
     @staticmethod
@@ -499,11 +673,4 @@ class Client:
 
         P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
         """
-        lg = self.backend.logits(tokens, ages)
-        risk = analytic_next_event_risk_np(lg, horizon)
-        order = np.argsort(-risk)[:top]
-        return RiskReport(
-            horizon=horizon,
-            items=[RiskItem(token=int(i), risk=float(risk[i]))
-                   for i in order],
-            backend=self.backend.name)
+        return self.backend.risk(tokens, ages, horizon=horizon, top=top)

@@ -1,0 +1,153 @@
+"""RemoteBackend: the network as a fourth pluggable inference backend.
+
+Implements the ``InferenceBackend`` surface over the versioned JSON/SSE wire
+protocol served by ``repro.serve.server`` — stdlib ``urllib`` only, no
+model code, no JAX — so ``Client(RemoteBackend(url))`` (or
+``Client.connect(url)``) is a drop-in for the artifact/engine/local backends
+and bit-identical to them under injected uniforms (the uniforms cross the
+wire as raw little-endian bytes, and tokens/ages round-trip exactly through
+JSON numbers).
+
+The server is the source of truth for validation: a bad request comes back
+as ``{"error": {"code", "message"}}`` and is re-raised here as the *same*
+typed ``repro.api.errors.ApiError`` subclass an in-process backend would
+have raised, so error handling is backend-agnostic too.
+
+Results keep the serving backend visible: ``result.backend`` is
+``"remote[engine]"`` etc., recording both the hop and what answered.
+"""
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+from typing import Iterator, List, Optional, Sequence
+
+from repro.api.client import InferenceBackend
+from repro.api.errors import (ApiError, InternalServerError,
+                              ProtocolVersionError, error_from_json)
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
+                               RiskReport, TrajectoryEvent, TrajectoryResult)
+
+__all__ = ["RemoteBackend"]
+
+
+class RemoteBackend(InferenceBackend):
+    """Client half of the wire protocol (see ``repro.serve.server``)."""
+    name = "remote"
+
+    def __init__(self, url: str, *, timeout: float = 300.0):
+        self.url = url.rstrip("/")
+        self.timeout = timeout
+        m = self._request("GET", "/v1/manifest")
+        v = str(m.get("protocol_version"))
+        if v != WIRE_PROTOCOL_VERSION:
+            raise ProtocolVersionError(
+                f"server at {self.url} speaks wire protocol {v!r}; this "
+                f"client supports {WIRE_PROTOCOL_VERSION!r}")
+        self.server_manifest = m
+        self.remote_backend = str(m.get("backend", "?"))
+        mm = m.get("model", {})
+        self.seq_len = int(mm["seq_len"])
+        self.vocab_size = int(mm["vocab_size"])
+        self.has_ages = bool(mm["has_ages"])
+        self.max_age = float(mm["max_age"])
+        self.death_token = int(mm["death_token"])
+
+    # -- wire plumbing -------------------------------------------------------
+    def _request(self, method: str, path: str, payload: Optional[dict] = None,
+                 stream: bool = False):
+        data = (json.dumps(payload).encode("utf-8")
+                if payload is not None else None)
+        req = urllib.request.Request(
+            self.url + path, data=data, method=method,
+            headers={"Content-Type": "application/json",
+                     "Accept": ("text/event-stream" if stream
+                                else "application/json")})
+        try:
+            resp = urllib.request.urlopen(req, timeout=self.timeout)
+        except urllib.error.HTTPError as e:
+            body = e.read()
+            try:
+                raise error_from_json(json.loads(body.decode("utf-8")))
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                raise InternalServerError(
+                    f"HTTP {e.code} from {self.url}{path}: "
+                    f"{body[:200]!r}") from None
+        except urllib.error.URLError as e:
+            raise InternalServerError(
+                f"cannot reach {self.url}{path}: {e.reason}") from None
+        if stream:
+            return resp
+        with resp:
+            return json.loads(resp.read().decode("utf-8"))
+
+    def _relabel(self, obj):
+        obj.backend = f"{self.name}[{obj.backend or self.remote_backend}]"
+        return obj
+
+    # -- InferenceBackend surface --------------------------------------------
+    def generate(self, req: GenerateRequest) -> TrajectoryResult:
+        out = self._request("POST", "/v1/generate", req.to_json())
+        return self._relabel(TrajectoryResult.from_json(out))
+
+    def generate_batch(self, reqs: Sequence[GenerateRequest]
+                       ) -> List[TrajectoryResult]:
+        out = self._request("POST", "/v1/generate_batch",
+                            {"protocol_version": WIRE_PROTOCOL_VERSION,
+                             "requests": [r.to_json() for r in reqs]})
+        return [self._relabel(TrajectoryResult.from_json(r))
+                for r in out.get("results", [])]
+
+    def stream(self, req: GenerateRequest) -> Iterator[TrajectoryEvent]:
+        """Per-event SSE: frames yield as the server's engine tick lands.
+
+        Non-generator wrapper: serialization (``rng``) and server-side
+        validation errors raise HERE, at the call — the same eager contract
+        as the in-process backends."""
+        resp = self._request("POST", "/v1/stream", req.to_json(), stream=True)
+        return self._parse_sse(resp)
+
+    def _parse_sse(self, resp) -> Iterator[TrajectoryEvent]:
+        try:
+            event: Optional[str] = None
+            data_lines: List[str] = []
+            for raw in resp:
+                line = raw.decode("utf-8").rstrip("\r\n")
+                if line.startswith("event:"):
+                    event = line[len("event:"):].strip()
+                elif line.startswith("data:"):
+                    data_lines.append(line[len("data:"):].strip())
+                elif line == "" and event is not None:
+                    payload = json.loads("\n".join(data_lines) or "null")
+                    if event == "event":
+                        yield TrajectoryEvent.from_json(payload)
+                    elif event == "error":
+                        raise error_from_json(payload)
+                    elif event == "done":
+                        return
+                    event, data_lines = None, []
+            raise InternalServerError(
+                "SSE stream ended without a 'done' frame")
+        finally:
+            resp.close()
+
+    def risk(self, tokens: Sequence[int],
+             ages: Optional[Sequence[float]] = None, *,
+             horizon: float = 5.0, top: int = 10) -> RiskReport:
+        payload: dict = {"protocol_version": WIRE_PROTOCOL_VERSION,
+                         "tokens": [int(t) for t in tokens],
+                         "horizon": float(horizon), "top": int(top)}
+        if ages is not None:
+            payload["ages"] = [float(a) for a in ages]
+        out = self._request("POST", "/v1/risk", payload)
+        return self._relabel(RiskReport.from_json(out))
+
+    def logits(self, tokens, ages=None):
+        raise NotImplementedError(
+            "the wire protocol exposes risk(), not raw logits — the paper's "
+            "privacy boundary keeps bulk logit export off the service "
+            "surface; use risk() or an in-process backend")
+
+    def healthz(self) -> dict:
+        return self._request("GET", "/v1/healthz")

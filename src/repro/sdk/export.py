@@ -135,7 +135,7 @@ def build_inference_fns(cfg: ModelConfig, seq_len: int) -> Dict[str, Any]:
             return _decode(p, cache_leaves, token, age, step)
     else:
         def decode_fn(p, cache_leaves, token, step):
-            return _decode(p, cache_leaves, None, token, step)
+            return _decode(p, cache_leaves, token, None, step)
 
     def resolve(p_spec):
         """Bind the cache structure for ``p_spec``; returns arg-spec lists."""

@@ -1,4 +1,13 @@
-"""Serving substrate: batched engine with slot continuous batching."""
+"""Serving substrate: batched engine with slot continuous batching, plus the
+HTTP/SSE wire front-end (``repro.serve.server``, imported lazily to keep
+``import repro.serve`` free of the client API stack)."""
 from repro.serve.engine import BatchedEngine, ReferenceEngine, Request
 
-__all__ = ["BatchedEngine", "ReferenceEngine", "Request"]
+__all__ = ["BatchedEngine", "ReferenceEngine", "Request", "InferenceServer"]
+
+
+def __getattr__(name):
+    if name == "InferenceServer":
+        from repro.serve.server import InferenceServer
+        return InferenceServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -35,7 +35,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, NamedTuple, Optional
+import threading
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +72,9 @@ class Request:
     out_tokens: Optional[List[int]] = None
     out_ages: Optional[List[float]] = None
     done: bool = False
+    # set (before on_done fires) if the engine loop failed this request —
+    # waiters must check it rather than trusting out_tokens
+    error: Optional[BaseException] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -253,6 +257,17 @@ class BatchedEngine:
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.pending: List[Request] = []
         self.completed: List[Request] = []
+        # foreground run() returns completed; background start() defaults
+        # this off so a long-lived server doesn't retain every request
+        self.retain_completed = True
+        # cross-thread submission (the HTTP front-end submits from handler
+        # threads while a background thread ticks): `_lock` guards `pending`,
+        # `_wake` cuts the idle backoff short on new work.  Slot/device state
+        # is touched only by whichever single thread drives step().
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._stop_flag = False
         # instrumentation (asserted on by tests, reported by benchmarks)
         self.ticks = 0
         self.host_syncs = 0
@@ -272,40 +287,139 @@ class BatchedEngine:
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):
+        """Thread-safe: handler threads enqueue while the loop thread ticks."""
         if len(req.tokens) == 0:
             raise ValueError("empty prompt")
         req.out_tokens, req.out_ages = [], []
-        self.pending.append(req)
+        with self._lock:
+            self.pending.append(req)
+        self._wake.set()
+
+    # -- background run loop (the HTTP front-end's async admission) ----------
+    def start(self, *, idle_min: float = 0.001, idle_max: float = 0.05,
+              retain_completed: bool = False) -> "BatchedEngine":
+        """Tick on a daemon thread until :meth:`stop`.
+
+        When no slot is active the loop backs off exponentially from
+        ``idle_min`` to ``idle_max`` seconds between polls; ``submit`` wakes
+        it immediately, so admission latency stays ~0 under load and the
+        idle engine costs no busy spin.
+
+        ``retain_completed=False`` (the default here, unlike foreground
+        ``run()``) stops appending finished requests to ``self.completed``:
+        a long-running server would otherwise leak every request's prompt,
+        outputs and uniforms forever — callers observe completion through
+        the per-request ``on_event``/``on_done`` hooks instead.
+        """
+        if self.running:
+            return self
+        self.retain_completed = retain_completed
+        self._stop_flag = False
+        self._wake.clear()
+        self._thread = threading.Thread(
+            target=self._loop, args=(idle_min, idle_max),
+            name="repro-engine-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def stop(self, join: bool = True, timeout: float = 60.0) -> None:
+        was_running = self.running
+        self._stop_flag = True
+        self._wake.set()
+        t = self._thread
+        if join and t is not None:
+            t.join(timeout=timeout)
+            if t.is_alive():
+                # mid-compile ticks can outlive the timeout: leave _thread
+                # set (running stays True) rather than race a zombie loop
+                # over slot state — the caller can retry stop()
+                raise RuntimeError(
+                    f"engine loop still ticking after {timeout}s "
+                    f"(jit compile in flight?) — retry stop()")
+        self._thread = None
+        # waiters parked on background-mode completion hooks must get an
+        # immediate error, not a request_timeout-later 504
+        if was_running and (self.pending
+                            or any(r is not None for r in self.slot_req)):
+            self._fail_inflight(
+                RuntimeError("engine stopped with the request in flight"))
+
+    def _loop(self, idle_min: float, idle_max: float) -> None:
+        idle = idle_min
+        while not self._stop_flag:
+            try:
+                progressed = self.step()
+            except Exception as e:          # fail loudly per-request, keep
+                self._fail_inflight(e)      # the loop alive for new work
+                progressed = False
+            if progressed:
+                idle = idle_min
+            else:
+                self._wake.wait(idle)
+                self._wake.clear()
+                idle = min(idle * 2.0, idle_max)
+
+    def _fail_inflight(self, exc: Exception) -> None:
+        """A tick blew up: every in-flight request gets the error (waiters
+        unblock via on_done) and slot state resets so serving continues."""
+        with self._lock:
+            victims = self.pending[:]
+            self.pending.clear()
+        victims += [r for r in self.slot_req if r is not None]
+        self.slot_req = [None] * self.slots
+        self._state = {k: jnp.zeros_like(v) for k, v in self._state.items()}
+        for req in victims:
+            req.error = exc
+            req.done = True
+            if req.on_done is not None:
+                req.on_done(req)
 
     # -- admission: bucketed batched prefill --------------------------------
     def _seq_bucket(self, n: int) -> int:
         return max(_next_pow2(n), self.min_seq_bucket)
 
     def _admit(self):
-        while self.pending:
-            free = [i for i, r in enumerate(self.slot_req) if r is None]
-            if not free:
+        while True:
+            with self._lock:
+                sel = self._select_admission()
+            if sel is None:
                 return
-            injected = self.pending[0].uniforms is not None
-            # one tick samples all slots from ONE uniform source: defer
-            # requests whose injectedness differs from the active cohort
-            # until it drains (they are admitted on a later tick)
-            occupied = [r for r in self.slot_req if r is not None]
-            if occupied and (occupied[0].uniforms is not None) != injected:
-                return
-            group: List[Request] = []
-            limit = len(free) if self.bucketed else 1
-            if len(self.pending[0].tokens) > self.max_context:
-                # over-width prompt: exact-shape solo admission (the ring
-                # cache keeps its last max_context tokens); never grouped,
-                # or shorter groupmates would be evicted by the S>W pack
-                limit = 1
-            while (self.pending and len(group) < limit
-                   and (self.pending[0].uniforms is not None) == injected
-                   and (not group
-                        or len(self.pending[0].tokens) <= self.max_context)):
-                group.append(self.pending.pop(0))
-            self._admit_group(group, free[:len(group)], injected)
+            self._admit_group(*sel)
+
+    def _select_admission(
+            self) -> Optional[Tuple[List[Request], List[int], bool]]:
+        """Pop the next admission cohort off ``pending`` (lock held by the
+        caller; the jitted prefill itself runs outside the lock so
+        submitters never block on device work)."""
+        if not self.pending:
+            return None
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if not free:
+            return None
+        injected = self.pending[0].uniforms is not None
+        # one tick samples all slots from ONE uniform source: defer
+        # requests whose injectedness differs from the active cohort
+        # until it drains (they are admitted on a later tick)
+        occupied = [r for r in self.slot_req if r is not None]
+        if occupied and (occupied[0].uniforms is not None) != injected:
+            return None
+        group: List[Request] = []
+        limit = len(free) if self.bucketed else 1
+        if len(self.pending[0].tokens) > self.max_context:
+            # over-width prompt: exact-shape solo admission (the ring
+            # cache keeps its last max_context tokens); never grouped,
+            # or shorter groupmates would be evicted by the S>W pack
+            limit = 1
+        while (self.pending and len(group) < limit
+               and (self.pending[0].uniforms is not None) == injected
+               and (not group
+                    or len(self.pending[0].tokens) <= self.max_context)):
+            group.append(self.pending.pop(0))
+        return group, free[:len(group)], injected
 
     def _admit_group(self, group: List[Request], slot_ids: List[int],
                      injected: bool):
@@ -376,7 +490,8 @@ class BatchedEngine:
                 req.on_event(int(evt), float(age) if self.is_delphi else None)
         if finished >= 0.5:
             req.done = True
-            self.completed.append(req)
+            if self.retain_completed:
+                self.completed.append(req)
             self.slot_req[slot] = None
             if req.on_done is not None:
                 req.on_done(req)
@@ -411,6 +526,10 @@ class BatchedEngine:
         return True
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
+        if self.running:
+            raise RuntimeError(
+                "engine is ticking on its background thread (start() was "
+                "called): submit() and wait on the request instead of run()")
         ticks = 0
         while (self.pending or any(r is not None for r in self.slot_req)) \
                 and ticks < max_ticks:

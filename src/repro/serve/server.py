@@ -1,0 +1,413 @@
+"""HTTP/SSE front-end: the wire-protocol half of the serving story.
+
+A stdlib-only (``http.server``) threaded server that exposes ANY
+``repro.api`` backend over the versioned JSON wire protocol of
+``repro.api.schemas`` — the cross-process counterpart of the paper's thin
+JS SDK talking to an inference surface.  ``repro.api.RemoteBackend`` is the
+matching client half; together they make the network a fourth pluggable
+backend (``Client.connect(url)``).
+
+Endpoints (all under ``/v1``; schemas are the canonical ``to_json`` forms):
+
+=====================  ======  ===============================================
+``/v1/generate``       POST    GenerateRequest -> TrajectoryResult
+``/v1/generate_batch`` POST    {"requests": [...]} -> {"results": [...]}
+``/v1/risk``           POST    {tokens, ages?, horizon?, top?} -> RiskReport
+``/v1/stream``         POST    GenerateRequest -> SSE: one ``event:`` frame
+                               per TrajectoryEvent, then ``done`` carrying
+                               the assembled TrajectoryResult (``error``
+                               frame on mid-stream failure)
+``/v1/manifest``       GET     protocol version, model/termination metadata,
+                               endpoint map (+ the FAIR artifact manifest
+                               when serving an ArtifactBackend)
+``/v1/healthz``        GET     liveness + engine stats
+=====================  ======  ===============================================
+
+Error contract: every failure is a ``repro.api.errors.ApiError`` rendered as
+``{"error": {"code", "message"}}`` with the taxonomy's 1:1 HTTP status —
+validation failures surface with the same stable codes whether the backend
+is local or remote.
+
+Concurrency: ``ThreadingHTTPServer`` gives one handler thread per
+connection.  An :class:`~repro.api.client.EngineBackend` gets **async
+admission** — the engine ticks on its own background thread
+(``BatchedEngine.start()``, idle backoff when no slot is active) and handler
+threads merely enqueue requests and park on completion hooks, so concurrent
+requests continuously batch onto engine slots.  Host-loop backends
+(artifact/local) are serialized by a lock.
+
+Run:  ``repro-serve --artifact DIR``  or
+      ``repro-serve --config delphi-2m --reduced``
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Iterator, List, Optional, Tuple
+from urllib.parse import urlsplit
+
+from repro.api.errors import (ApiError, InternalServerError,
+                              InvalidRequestError, UnknownEndpointError)
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
+                               TrajectoryEvent, TrajectoryResult,
+                               check_protocol)
+
+SERVER_NAME = "repro-serve/0.1"
+
+_ENDPOINTS = {
+    "generate": {"method": "POST", "path": "/v1/generate"},
+    "generate_batch": {"method": "POST", "path": "/v1/generate_batch"},
+    "risk": {"method": "POST", "path": "/v1/risk"},
+    "stream": {"method": "POST", "path": "/v1/stream", "content": "sse"},
+    "manifest": {"method": "GET", "path": "/v1/manifest"},
+    "healthz": {"method": "GET", "path": "/v1/healthz"},
+}
+
+
+class InferenceServer:
+    """Threaded HTTP wrapper around one ``repro.api`` backend.
+
+    >>> server = InferenceServer(ArtifactBackend(d), port=0)   # 0 = ephemeral
+    >>> server.start()
+    >>> Client.connect(server.address).generate(tokens=..., ages=...)
+    >>> server.stop()
+    """
+
+    def __init__(self, backend, host: str = "127.0.0.1", port: int = 8478,
+                 *, request_timeout: float = 300.0, quiet: bool = True):
+        from repro.api.client import EngineBackend
+        self.backend = backend
+        self.quiet = quiet
+        self._is_engine = isinstance(backend, EngineBackend)
+        if self._is_engine:
+            backend.request_timeout = request_timeout
+        # host-loop backends run the model on the handler thread: serialize
+        # them (the engine serializes on its own tick thread instead)
+        self._serial = threading.Lock()
+        handler = type("_BoundHandler", (_Handler,), {"srv": self})
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd.daemon_threads = True
+        # never join handler threads on close: a stalled client (open
+        # connection, unread SSE) would park stop() forever
+        self.httpd.block_on_close = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def address(self) -> str:
+        host, port = self.httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "InferenceServer":
+        """Serve on a daemon thread (embedding / tests); returns self."""
+        if self._is_engine:
+            self.backend.engine.start()
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        name="repro-serve-http", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Serve on the calling thread (the CLI entry point)."""
+        if self._is_engine:
+            self.backend.engine.start()
+        try:
+            self.httpd.serve_forever()
+        finally:
+            self.stop()
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        # engine first: in-flight waiters parked in handler threads get
+        # their immediate failure before the listener is torn down
+        if self._is_engine:
+            self.backend.engine.stop()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+    def __enter__(self) -> "InferenceServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- endpoint logic (handler threads call these) -------------------------
+    def _exclusive(self):
+        """Model-executing section for host-loop backends; no-op for the
+        engine, whose tick thread is the serialization point."""
+        if self._is_engine:
+            return contextlib.nullcontext()
+        return self._serial
+
+    def manifest(self) -> dict:
+        b = self.backend
+        m = {
+            "protocol_version": WIRE_PROTOCOL_VERSION,
+            "server": SERVER_NAME,
+            "backend": b.name,
+            "model": {
+                "seq_len": int(b.seq_len),
+                "vocab_size": int(b.vocab_size),
+                "has_ages": bool(b.has_ages),
+                "max_age": float(b.max_age),
+                "death_token": int(b.death_token),
+            },
+            "endpoints": _ENDPOINTS,
+        }
+        runtime = getattr(b, "runtime", None)       # FAIR provenance pass-
+        if runtime is not None:                     # through for artifacts
+            m["artifact"] = runtime.manifest
+        return m
+
+    def healthz(self) -> dict:
+        h = {"ok": True, "backend": self.backend.name,
+             "protocol_version": WIRE_PROTOCOL_VERSION}
+        if self._is_engine:
+            eng = self.backend.engine
+            h["engine"] = {
+                "running": eng.running,
+                "ticks": eng.ticks,
+                "pending": len(eng.pending),
+                "active_slots": sum(r is not None for r in eng.slot_req),
+                "slots": eng.slots,
+            }
+        return h
+
+    def generate(self, req: GenerateRequest) -> TrajectoryResult:
+        with self._exclusive():
+            return self.backend.generate(req)
+
+    def generate_batch(self, reqs: List[GenerateRequest]
+                       ) -> List[TrajectoryResult]:
+        with self._exclusive():
+            return self.backend.generate_batch(reqs)
+
+    def risk(self, d: dict):
+        check_protocol(d)
+        tokens = d.get("tokens")
+        if tokens is None:
+            raise InvalidRequestError("missing required field 'tokens'")
+        try:
+            tokens = [int(t) for t in tokens]
+            ages = ([float(a) for a in d["ages"]]
+                    if d.get("ages") is not None else None)
+            horizon = float(d.get("horizon", 5.0))
+            top = int(d.get("top", 10))
+        except (ValueError, TypeError) as e:
+            raise InvalidRequestError(
+                f"malformed risk request field: {e}") from e
+        with self._serial:        # logits run on the handler thread for
+            return self.backend.risk(   # every backend, engine included
+                tokens, ages, horizon=horizon, top=top)
+
+    def stream(self, req: GenerateRequest) -> Iterator[TrajectoryEvent]:
+        it = self.backend.stream(req)
+        lock = None if self._is_engine else self._serial
+        while True:
+            # hold the lock only across the model step that produces the
+            # next event, never across the socket write the caller does
+            # with it — a stalled SSE consumer must not block the server
+            if lock is not None:
+                with lock:
+                    ev = next(it, None)
+            else:
+                ev = next(it, None)
+            if ev is None:
+                return
+            yield ev
+
+
+class _Handler(BaseHTTPRequestHandler):
+    """One request per connection (HTTP/1.0 close-delimited, which is what
+    lets SSE stream over the stdlib server without chunked encoding)."""
+    server_version = SERVER_NAME
+    srv: InferenceServer            # bound by InferenceServer.__init__
+
+    # -- plumbing ------------------------------------------------------------
+    def log_message(self, fmt, *args):
+        if not self.srv.quiet:
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    def _send_json(self, obj: dict, status: int = 200) -> None:
+        body = json.dumps(obj).encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_api_error(self, err: ApiError) -> None:
+        self._send_json(err.to_json(), err.http_status)
+
+    def _read_json(self) -> dict:
+        n = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(n) if n else b""
+        try:
+            return json.loads(raw.decode("utf-8") or "null")
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise InvalidRequestError(f"request body is not valid JSON: {e}")
+
+    def _sse(self, event: str, obj: dict) -> None:
+        self.wfile.write(f"event: {event}\n".encode("utf-8"))
+        self.wfile.write(f"data: {json.dumps(obj)}\n\n".encode("utf-8"))
+        self.wfile.flush()
+
+    # -- routes --------------------------------------------------------------
+    def do_GET(self):          # noqa: N802 (stdlib handler naming)
+        path = urlsplit(self.path).path
+        try:
+            if path == "/v1/healthz":
+                self._send_json(self.srv.healthz())
+            elif path == "/v1/manifest":
+                self._send_json(self.srv.manifest())
+            else:
+                raise UnknownEndpointError(f"no such endpoint: GET {path}")
+        except ApiError as e:
+            self._send_api_error(e)
+        except (BrokenPipeError, ConnectionResetError):
+            pass
+        except Exception as e:                      # noqa: BLE001
+            self._send_api_error(InternalServerError(
+                f"{type(e).__name__}: {e}"))
+
+    def do_POST(self):         # noqa: N802
+        path = urlsplit(self.path).path
+        try:
+            if path == "/v1/generate":
+                req = GenerateRequest.from_json(self._read_json())
+                self._send_json(self.srv.generate(req).to_json())
+            elif path == "/v1/generate_batch":
+                body = self._read_json()
+                if not isinstance(body, dict) or "requests" not in body:
+                    raise InvalidRequestError(
+                        "generate_batch body must be "
+                        "{\"requests\": [GenerateRequest, ...]}")
+                check_protocol(body)
+                reqs = [GenerateRequest.from_json(r)
+                        for r in body["requests"]]
+                results = self.srv.generate_batch(reqs)
+                self._send_json({
+                    "protocol_version": WIRE_PROTOCOL_VERSION,
+                    "results": [r.to_json() for r in results]})
+            elif path == "/v1/risk":
+                body = self._read_json()
+                if not isinstance(body, dict):
+                    raise InvalidRequestError(
+                        "risk body must be a JSON object")
+                self._send_json(self.srv.risk(body).to_json())
+            elif path == "/v1/stream":
+                self._do_stream()
+            else:
+                raise UnknownEndpointError(f"no such endpoint: POST {path}")
+        except ApiError as e:
+            self._send_api_error(e)
+        except (BrokenPipeError, ConnectionResetError):
+            pass
+        except Exception as e:                      # noqa: BLE001
+            self._send_api_error(InternalServerError(
+                f"{type(e).__name__}: {e}"))
+
+    def _do_stream(self) -> None:
+        req = GenerateRequest.from_json(self._read_json())
+        it = self.srv.stream(req)
+        # pull the first event BEFORE committing to SSE, so validation
+        # failures still map to proper HTTP statuses + JSON bodies
+        first: Tuple[TrajectoryEvent, ...] = ()
+        try:
+            ev = next(it)
+            first = (ev,)
+        except StopIteration:
+            pass
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        events: List[TrajectoryEvent] = []
+        try:
+            for ev in (*first, *it):
+                events.append(ev)
+                self._sse("event", ev.to_json())
+            result = self.srv.backend._result(req, events)
+            self._sse("done", result.to_json())
+        except (BrokenPipeError, ConnectionResetError):
+            pass                                    # client went away
+        except ApiError as e:                       # mid-stream: headers are
+            self._sse("error", e.to_json())         # out — error as a frame
+        except Exception as e:                      # noqa: BLE001
+            self._sse("error", InternalServerError(
+                f"{type(e).__name__}: {e}").to_json())
+
+
+# ---------------------------------------------------------------------------
+# CLI: the `repro-serve` console script
+# ---------------------------------------------------------------------------
+def _build_backend(args):
+    if args.artifact:
+        from repro.api.client import ArtifactBackend
+        return ArtifactBackend(args.artifact)
+    if not args.config:
+        raise SystemExit("repro-serve: pass --artifact DIR or --config NAME")
+    import jax
+    from repro.api.client import EngineBackend, LocalBackend
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config(args.config, reduced=args.reduced).replace(
+        dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.backend == "local":
+        return LocalBackend(params, cfg)
+    return EngineBackend.create(params, cfg, slots=args.slots,
+                                max_context=args.max_context)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-serve",
+        description="Serve a repro.api backend over the v%s JSON/SSE wire "
+                    "protocol" % WIRE_PROTOCOL_VERSION)
+    src = ap.add_argument_group("model source (one required)")
+    src.add_argument("--artifact", metavar="DIR",
+                     help="exported FAIR artifact directory (ArtifactBackend)")
+    src.add_argument("--config", metavar="NAME",
+                     help="config name, e.g. delphi-2m: fresh params served "
+                          "via --backend")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced layer/width preset for --config")
+    ap.add_argument("--backend", choices=("engine", "local"),
+                    default="engine",
+                    help="--config mode: continuous-batching engine "
+                         "(default) or in-process local backend")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8478,
+                    help="0 picks an ephemeral port")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-context", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--request-timeout", type=float, default=300.0)
+    ap.add_argument("--verbose", action="store_true",
+                    help="log one line per HTTP request")
+    args = ap.parse_args(argv)
+
+    backend = _build_backend(args)
+    server = InferenceServer(backend, args.host, args.port,
+                             request_timeout=args.request_timeout,
+                             quiet=not args.verbose)
+    print(f"repro-serve: {backend.name} backend on {server.address} "
+          f"(wire protocol v{WIRE_PROTOCOL_VERSION})")
+    for name, ep in _ENDPOINTS.items():
+        print(f"  {ep['method']:4s} {ep['path']}")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("repro-serve: shutting down")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

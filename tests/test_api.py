@@ -153,6 +153,70 @@ def test_decode_path_max_age_censoring(setup):
     assert all(a <= boundary for a in cut.ages)
 
 
+def test_v2_decode_matches_full_graph_generic_lm(tmp_path):
+    """Regression: the exported non-delphi decode graph must receive
+    (token, step) in the right argument slots — spec-v2 export used to pass
+    the token into the age slot for age_encoding=False configs and crash at
+    trace time."""
+    from repro.models import init_params
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    d = str(tmp_path / "lm_art")
+    from repro.sdk import export_model as export
+    export(params, cfg, d)
+    u = _uniforms(4, cfg.vocab_size, seed=11)
+    toks = [1, 5, 9]
+    full = Client.from_artifact(d, use_decode_graph=False).generate(
+        tokens=toks, max_new=4, uniforms=u)
+    dec = Client.from_artifact(d).generate(tokens=toks, max_new=4,
+                                           uniforms=u)
+    assert len(dec.tokens) == 4
+    assert dec.tokens == full.tokens
+
+
+def test_uniforms_shape_validated(setup):
+    """A malformed uniforms array must be a structured error at validation,
+    not an IndexError mid-loop (on the engine that would poison every
+    in-flight request)."""
+    from repro.api.errors import InvalidRequestError
+    params, cfg, d2, _ = setup
+    bad = _uniforms(2, cfg.vocab_size)                 # rows < max_new
+    for client in (Client.from_artifact(d2),
+                   Client.from_params(params, cfg),
+                   Client.serving(params, cfg, slots=1, max_context=64)):
+        with pytest.raises(InvalidRequestError, match="uniforms"):
+            client.generate(tokens=TOKS, ages=AGES, max_new=6, uniforms=bad)
+    with pytest.raises(InvalidRequestError, match="uniforms"):
+        Client.from_artifact(d2).generate(
+            tokens=TOKS, ages=AGES, max_new=2,
+            uniforms=_uniforms(2, cfg.vocab_size + 1))  # wrong vocab width
+
+
+def test_stream_validates_eagerly_on_every_backend(setup):
+    """stream() raises at the call, not at the consumer's first next() —
+    the same timing on all backends."""
+    params, cfg, d2, _ = setup
+    for client in (Client.from_artifact(d2),
+                   Client.from_params(params, cfg),
+                   Client.serving(params, cfg, slots=1, max_context=64)):
+        with pytest.raises(ValueError, match="empty"):
+            client.stream(tokens=[], ages=[])       # no iteration needed
+
+
+def test_engine_rejects_per_request_seed(setup):
+    """The engine draws from its construction-time PRNG stream: a
+    per-request seed would be silently ignored, so it raises instead."""
+    params, cfg, _, _ = setup
+    client = Client.serving(params, cfg, slots=1, max_context=64)
+    with pytest.raises(ValueError, match="seed"):
+        client.generate(tokens=TOKS, ages=AGES, max_new=3, seed=7)
+    # seed with injected uniforms is inert and therefore fine
+    u = _uniforms(3, cfg.vocab_size)
+    out = client.generate(tokens=TOKS, ages=AGES, max_new=3, uniforms=u,
+                          seed=7)
+    assert out.backend == "engine"
+
+
 # ---------------------------------------------------------------------------
 # Streaming + batching
 # ---------------------------------------------------------------------------

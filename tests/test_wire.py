@@ -1,0 +1,230 @@
+"""Wire protocol v1: canonical JSON forms + the structured error taxonomy.
+
+Every schema must round-trip bit-exactly through its ``to_json``/``from_json``
+pair (numpy uniforms via base64 raw bytes), requests must reject live host
+PRNG state at the serialization boundary, and every error carries a stable
+machine-readable code while staying a ``ValueError`` for the legacy SDK
+contract."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (AgesLengthMismatchError, AgesRequiredError, ApiError,
+                       EmptyTrajectoryError, GenerateRequest,
+                       ProtocolVersionError, RiskItem, RiskReport,
+                       RngNotSerializableError, TooLongError,
+                       TrajectoryEvent, TrajectoryResult,
+                       WIRE_PROTOCOL_VERSION, error_from_code,
+                       error_from_json)
+from repro.api.errors import (InvalidRequestError, RequestTimeoutError,
+                              UnknownEndpointError, UnsupportedOverrideError)
+
+from hypcompat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# GenerateRequest
+# ---------------------------------------------------------------------------
+def test_generate_request_roundtrip_full():
+    u = np.random.default_rng(0).uniform(size=(5, 17)).astype(np.float32)
+    req = GenerateRequest(tokens=[3, 10, 20], ages=[0.0, 15.5, 28.25],
+                          max_new=5, max_age=80.0, death_token=1,
+                          uniforms=u, seed=9)
+    d = json.loads(json.dumps(req.to_json()))       # through real JSON text
+    assert d["protocol_version"] == WIRE_PROTOCOL_VERSION
+    back = GenerateRequest.from_json(d)
+    assert back.tokens == [3, 10, 20]
+    assert back.ages == [0.0, 15.5, 28.25]
+    assert (back.max_new, back.max_age, back.death_token, back.seed) == \
+        (5, 80.0, 1, 9)
+    assert back.uniforms.dtype == np.float32
+    assert (back.uniforms == u).all()               # bit-exact via base64
+
+
+def test_generate_request_roundtrip_minimal():
+    d = GenerateRequest(tokens=[7]).to_json()
+    assert "ages" not in d and "uniforms" not in d and "max_age" not in d
+    back = GenerateRequest.from_json(json.loads(json.dumps(d)))
+    assert back.tokens == [7] and back.ages is None
+    assert back.uniforms is None and back.rng is None
+
+
+def test_generate_request_uniforms_accept_nested_lists():
+    """Hand-written clients (the paper's JS SDK shape) may send plain
+    nested lists instead of the base64 object."""
+    back = GenerateRequest.from_json(
+        {"tokens": [3], "uniforms": [[0.25, 0.5], [0.75, 1.0]]})
+    assert back.uniforms.shape == (2, 2)
+    np.testing.assert_array_equal(
+        back.uniforms, np.asarray([[0.25, 0.5], [0.75, 1.0]], np.float32))
+
+
+def test_generate_request_rejects_rng():
+    req = GenerateRequest(tokens=[3], rng=np.random.default_rng(0))
+    with pytest.raises(RngNotSerializableError) as ei:
+        req.to_json()
+    assert ei.value.code == "rng_not_serializable"
+    assert isinstance(ei.value, ValueError)         # legacy contract
+
+
+def test_generate_request_protocol_version_mismatch():
+    with pytest.raises(ProtocolVersionError) as ei:
+        GenerateRequest.from_json({"protocol_version": "999", "tokens": [3]})
+    assert ei.value.code == "protocol_version_mismatch"
+    # absent version is tolerated (hand-written minimal clients)
+    assert GenerateRequest.from_json({"tokens": [3]}).tokens == [3]
+
+
+def test_generate_request_missing_tokens():
+    with pytest.raises(InvalidRequestError) as ei:
+        GenerateRequest.from_json({"max_new": 4})
+    assert ei.value.code == "invalid_request"
+    with pytest.raises(InvalidRequestError):
+        GenerateRequest.from_json([1, 2, 3])
+
+
+def test_generate_request_bad_uniforms_object():
+    with pytest.raises(InvalidRequestError):
+        GenerateRequest.from_json({"tokens": [3], "uniforms": "zzz"})
+    with pytest.raises(InvalidRequestError):
+        GenerateRequest.from_json(
+            {"tokens": [3], "uniforms": {"b64": "!!!not-base64",
+                                         "shape": [1], "dtype": "float32"}})
+
+
+# ---------------------------------------------------------------------------
+# Results / events / risk
+# ---------------------------------------------------------------------------
+def test_trajectory_result_roundtrip():
+    res = TrajectoryResult(tokens=[5, 81], ages=[30.25, 31.5],
+                           prompt_tokens=[3, 10], prompt_ages=[0.0, 15.0],
+                           backend="engine")
+    back = TrajectoryResult.from_json(json.loads(json.dumps(res.to_json())))
+    assert back == res
+    assert back.full_tokens == [3, 10, 5, 81]
+
+
+def test_trajectory_event_roundtrip():
+    ev = TrajectoryEvent(index=2, token=81, age=31.5)
+    assert TrajectoryEvent.from_json(ev.to_json()) == ev
+    lm = TrajectoryEvent(index=0, token=4)          # generic LM: no age
+    d = lm.to_json()
+    assert "age" not in d
+    assert TrajectoryEvent.from_json(d) == lm
+
+
+def test_risk_report_roundtrip():
+    rep = RiskReport(horizon=5.0,
+                     items=[RiskItem(token=7, risk=0.25),
+                            RiskItem(token=2, risk=0.125)],
+                     backend="local")
+    back = RiskReport.from_json(json.loads(json.dumps(rep.to_json())))
+    assert back == rep
+    assert back.as_dicts() == rep.as_dicts()
+
+
+# ---------------------------------------------------------------------------
+# Property tests (skip without hypothesis — tests/hypcompat.py)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(tokens=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=64),
+       seed=st.integers(0, 2**31 - 1),
+       max_new=st.integers(1, 512))
+def test_prop_request_tokens_roundtrip(tokens, seed, max_new):
+    req = GenerateRequest(tokens=tokens, max_new=max_new, seed=seed)
+    back = GenerateRequest.from_json(json.loads(json.dumps(req.to_json())))
+    assert back.tokens == tokens
+    assert back.seed == seed and back.max_new == max_new
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), v=st.integers(1, 33), seed=st.integers(0, 999))
+def test_prop_uniforms_bit_exact(n, v, seed):
+    u = np.random.default_rng(seed).uniform(size=(n, v)).astype(np.float32)
+    req = GenerateRequest(tokens=[1], uniforms=u)
+    back = GenerateRequest.from_json(json.loads(json.dumps(req.to_json())))
+    assert back.uniforms.shape == (n, v)
+    assert (back.uniforms == u).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(ages=st.lists(st.floats(0.0, 120.0, allow_nan=False), min_size=1,
+                     max_size=32))
+def test_prop_ages_roundtrip_exact(ages):
+    """Python floats survive JSON text exactly (shortest-repr round trip) —
+    the property that makes cross-process trajectories bit-comparable."""
+    req = GenerateRequest(tokens=[1] * len(ages), ages=ages)
+    back = GenerateRequest.from_json(json.loads(json.dumps(req.to_json())))
+    assert back.ages == ages
+
+
+@settings(max_examples=50, deadline=None)
+@given(tokens=st.lists(st.integers(0, 10**6), max_size=32),
+       ages=st.lists(st.floats(0, 200, allow_nan=False), max_size=32))
+def test_prop_result_roundtrip(tokens, ages):
+    res = TrajectoryResult(tokens=tokens, ages=ages, prompt_tokens=[1],
+                           prompt_ages=[0.5], backend="x")
+    back = TrajectoryResult.from_json(json.loads(json.dumps(res.to_json())))
+    assert back == res
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+def test_error_codes_stable():
+    """The machine-readable contract: codes and HTTP statuses are API."""
+    expect = {
+        EmptyTrajectoryError: ("empty_trajectory", 400),
+        TooLongError: ("too_long", 400),
+        AgesRequiredError: ("ages_required", 400),
+        AgesLengthMismatchError: ("ages_length_mismatch", 400),
+        RngNotSerializableError: ("rng_not_serializable", 400),
+        UnsupportedOverrideError: ("unsupported_override", 400),
+        InvalidRequestError: ("invalid_request", 400),
+        ProtocolVersionError: ("protocol_version_mismatch", 409),
+        UnknownEndpointError: ("unknown_endpoint", 404),
+        RequestTimeoutError: ("timeout", 504),
+    }
+    for cls, (code, status) in expect.items():
+        e = cls("boom")
+        assert (e.code, e.http_status) == (code, status), cls
+        assert isinstance(e, ValueError)
+        assert ApiError.registry[code] is cls
+
+
+def test_error_json_roundtrip():
+    e = AgesLengthMismatchError("ages/tokens length mismatch: 2 vs 3")
+    body = json.loads(json.dumps(e.to_json()))
+    back = error_from_json(body)
+    assert type(back) is AgesLengthMismatchError
+    assert back.code == e.code and back.message == e.message
+
+
+def test_error_unknown_code_degrades():
+    e = error_from_code("code_from_the_future", "newer server")
+    assert type(e) is ApiError and e.code == "code_from_the_future"
+    assert error_from_json({"nonsense": 1}).code == "internal"
+
+
+def test_backend_validate_raises_taxonomy():
+    """InferenceBackend._validate speaks the taxonomy (and therefore so does
+    every backend, local or remote)."""
+    from repro.api import InferenceBackend
+
+    b = InferenceBackend()
+    b.seq_len, b.vocab_size, b.has_ages = 8, 4, True
+    with pytest.raises(EmptyTrajectoryError, match="empty"):
+        b._validate([], [])
+    with pytest.raises(TooLongError, match="longer than"):
+        b._validate(list(range(9)), [0.0] * 9)
+    with pytest.raises(AgesRequiredError, match="ages"):
+        b._validate([1], None)
+    with pytest.raises(AgesLengthMismatchError, match="mismatch"):
+        b._validate([1, 2], [0.0])
+
+
+def test_backend_registry_has_four_backends():
+    from repro.api import Client
+    assert {"artifact", "engine", "local",
+            "remote"} <= set(Client.backends())
