@@ -17,9 +17,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     (interpret-mode CPU proxy) vs jnp oracle
   train_step_delphi                 dual-loss training throughput, tokens/s
   serving_engine_batched            slot continuous batching end-to-end
+  serving_ring/paged_fixed_mem      paged KV cache vs dense ring at EQUAL
+                                    resident KV bytes: tokens/s, ticks/s,
+                                    peak concurrent requests, pool
+                                    utilization, preemptions
   http_generate_p50/p95             wire-protocol serving: concurrent
                                     RemoteBackend clients vs the threaded
                                     HTTP front-end (req/s + latency tails)
+  http_keepalive_*                  HTTP/1.1 keep-alive connection reuse vs
+                                    a fresh socket per call (req/s delta)
   roofline_*                        derived = dominant roofline term (reads
                                     experiments/dryrun; skipped when absent)
 
@@ -259,6 +265,64 @@ def bench_serving_engine():
     _row("serving_engine_speedup", 0.0,
          f"{(ev_d / dt_d) / max(ev_r / dt_r, 1e-9):.2f}x tokens/s "
          f"device-resident vs seed")
+    bench_paged_vs_ring(params, cfg)
+
+
+def bench_paged_vs_ring(params, cfg):
+    """Fixed-memory concurrency: a dense ring burns slots x max_context
+    whether a trajectory is 5 events or 500; the paged pool admits by
+    free-block budget, so at the SAME resident KV bytes it sustains far
+    more concurrent short requests (Delphi trajectories are short-median/
+    long-tail).  Reports KV-cache bytes, block-pool utilization and peak
+    concurrent requests alongside tokens/s + ticks/s."""
+    from repro.serve import BatchedEngine, Request
+
+    W, bs, dense_slots = 128, 16, 4
+    n_req, max_new = 24, 12
+
+    def _requests():
+        return [Request(tokens=np.arange(3, 9, dtype=np.int32),
+                        ages=np.linspace(0, 30, 6).astype(np.float32),
+                        max_new=max_new) for _ in range(n_req)]
+
+    def _measure(eng):
+        for r in _requests():
+            eng.submit(r)
+        eng.run()                        # warm ALL jit shapes (same load)
+        eng.peak_active, t0 = 0, time.perf_counter()
+        ticks0 = eng.ticks
+        for r in _requests():
+            eng.submit(r)
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        ev = sum(len(r.out_tokens) for r in done[-n_req:])
+        return ev, dt, eng.ticks - ticks0
+
+    ring = BatchedEngine(params, cfg, slots=dense_slots, max_context=W)
+    ev, dt, ticks = _measure(ring)
+    _row("serving_ring_fixed_mem", dt * 1e6 / max(ev, 1),
+         f"{ev / dt:.1f} events/s, {ticks / dt:.1f} ticks/s, "
+         f"kv_bytes={ring.cache_bytes} peak_concurrent={ring.peak_active} "
+         f"({dense_slots} dense slots)")
+
+    # same resident KV bytes: pool holds dense_slots * (W/bs) real blocks
+    paged = BatchedEngine(params, cfg, slots=4 * dense_slots, max_context=W,
+                          cache="paged", block_size=bs,
+                          blocks=dense_slots * (W // bs) + 1)
+    ev_p, dt_p, ticks_p = _measure(paged)
+    st = paged.pool_stats()
+    _row("serving_paged_fixed_mem", dt_p * 1e6 / max(ev_p, 1),
+         f"{ev_p / dt_p:.1f} events/s, {ticks_p / dt_p:.1f} ticks/s, "
+         f"kv_bytes={paged.cache_bytes} peak_concurrent={paged.peak_active} "
+         f"peak_pool_util={st['blocks_peak_used'] / max(paged.allocator.capacity, 1):.2f} "
+         f"preemptions={st['preemptions']}")
+    assert paged.allocator.used == 0, "paged benchmark leaked blocks"
+    assert paged.peak_active > ring.peak_active, \
+        (paged.peak_active, ring.peak_active)
+    _row("serving_paged_concurrency_gain", 0.0,
+         f"{paged.peak_active / max(ring.peak_active, 1):.1f}x peak "
+         f"concurrent requests at equal KV bytes "
+         f"({paged.cache_bytes / max(ring.cache_bytes, 1):.2f}x bytes)")
 
 
 def bench_http():
@@ -337,6 +401,51 @@ def bench_http():
          f"{n} requests end-to-end over HTTP (engine async admission)")
 
 
+def bench_http_keepalive():
+    """HTTP/1.1 keep-alive vs socket-per-call: the same sequential risk()
+    round-trips through one persistent RemoteBackend connection and through
+    a fresh TCP connection each call — the wire-overhead delta the
+    keep-alive rework buys (model work is identical, so the gap is pure
+    connection setup)."""
+    from repro.api import RemoteBackend
+    from repro.api.client import EngineBackend
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.server import InferenceServer
+
+    cfg = get_config("delphi-2m", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend.create(params, cfg, slots=2, max_context=64)
+    server = InferenceServer(backend, port=0).start()
+    try:
+        n_calls = 40
+        toks = list(range(3, 9))
+        ages = np.linspace(0, 30, 6).tolist()
+
+        def measure(keep_alive):
+            rb = RemoteBackend(server.address, keep_alive=keep_alive)
+            rb.risk(toks, ages, top=4)          # warm the logits jit
+            t0 = time.perf_counter()
+            for _ in range(n_calls):
+                rb.risk(toks, ages, top=4)
+            dt = time.perf_counter() - t0
+            opened = rb.connections_opened
+            rb.close()
+            return dt, opened
+
+        dt_ka, conns_ka = measure(True)
+        dt_na, conns_na = measure(False)
+    finally:
+        server.stop()
+    _row("http_keepalive_req", dt_ka * 1e6 / n_calls,
+         f"{n_calls / dt_ka:.1f} req/s over {conns_ka} connection(s)")
+    _row("http_per_call_conn_req", dt_na * 1e6 / n_calls,
+         f"{n_calls / dt_na:.1f} req/s over {conns_na} connections")
+    _row("http_keepalive_speedup", 0.0,
+         f"{(n_calls / dt_ka) / max(n_calls / dt_na, 1e-9):.2f}x req/s "
+         f"keep-alive vs socket-per-call")
+
+
 def bench_calibration():
     """Delphi-style evaluation: generated cohort vs held-out cohort stats."""
     from repro.configs import get_config
@@ -385,6 +494,7 @@ BENCHES = {
     "train": bench_train_step,
     "serve": bench_serving_engine,
     "http": bench_http,
+    "http_keepalive": bench_http_keepalive,
     "calibration": bench_calibration,
     "roofline": bench_roofline,
 }

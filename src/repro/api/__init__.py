@@ -9,7 +9,8 @@ from repro.api.client import (ArtifactBackend, Client, EngineBackend,
                               InferenceBackend, LocalBackend)
 from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
                               ApiError, EmptyTrajectoryError,
-                              ProtocolVersionError, RngNotSerializableError,
+                              ProtocolVersionError, RequestCancelledError,
+                              RequestTimeoutError, RngNotSerializableError,
                               TooLongError, error_from_code, error_from_json)
 from repro.api.remote import RemoteBackend
 from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
@@ -23,5 +24,6 @@ __all__ = [
     "RiskItem", "RiskReport", "WIRE_PROTOCOL_VERSION",
     "ApiError", "EmptyTrajectoryError", "TooLongError", "AgesRequiredError",
     "AgesLengthMismatchError", "RngNotSerializableError",
-    "ProtocolVersionError", "error_from_code", "error_from_json",
+    "ProtocolVersionError", "RequestCancelledError", "RequestTimeoutError",
+    "error_from_code", "error_from_json",
 ]

@@ -223,6 +223,14 @@ class InferenceBackend:
                        ) -> List[TrajectoryResult]:
         return [self.generate(r) for r in reqs]
 
+    def cancel(self, request_id: str) -> bool:
+        """Cancel an in-flight ``generate``/``stream`` by its
+        ``GenerateRequest.request_id``.  Host-loop backends run the model on
+        the caller's thread and have nothing concurrent to cancel — only the
+        engine (slot eviction + block free) and remote (``POST /v1/cancel``)
+        backends override this.  Returns False when nothing was cancelled."""
+        return False
+
     def risk(self, tokens: Sequence[int],
              ages: Optional[Sequence[float]] = None, *,
              horizon: float = 5.0, top: int = 10) -> RiskReport:
@@ -471,7 +479,14 @@ class EngineBackend(InferenceBackend):
             tokens=np.asarray(req.tokens, np.int32),
             ages=(np.asarray(req.ages, np.float32)
                   if req.ages is not None else None),
-            max_new=req.max_new, uniforms=req.uniforms, **kw)
+            max_new=req.max_new, uniforms=req.uniforms,
+            request_id=req.request_id, **kw)
+
+    def cancel(self, request_id: str) -> bool:
+        """Propagate cancellation into the engine: the request leaves its
+        slot (paged blocks freed) and its waiters unblock with a structured
+        ``request_cancelled`` error."""
+        return self.engine.cancel(request_id)
 
     def logits(self, tokens, ages=None):
         self._validate(tokens, ages)
@@ -674,3 +689,10 @@ class Client:
         P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
         """
         return self.backend.risk(tokens, ages, horizon=horizon, top=top)
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel an in-flight request by the ``request_id`` it was
+        submitted with (set ``GenerateRequest.request_id`` yourself so you
+        hold the handle).  Engine-backed and remote clients propagate this
+        to slot eviction; returns False when nothing was cancelled."""
+        return self.backend.cancel(request_id)

@@ -22,8 +22,8 @@ __all__ = [
     "ApiError", "EmptyTrajectoryError", "TooLongError", "AgesRequiredError",
     "AgesLengthMismatchError", "RngNotSerializableError",
     "UnsupportedOverrideError", "InvalidRequestError", "ProtocolVersionError",
-    "UnknownEndpointError", "RequestTimeoutError", "InternalServerError",
-    "error_from_code", "error_from_json",
+    "UnknownEndpointError", "RequestTimeoutError", "RequestCancelledError",
+    "InternalServerError", "error_from_code", "error_from_json",
 ]
 
 
@@ -111,6 +111,14 @@ class UnknownEndpointError(ApiError):
 class RequestTimeoutError(ApiError):
     code = "timeout"
     http_status = 504
+
+
+class RequestCancelledError(ApiError):
+    """The request was cancelled (``POST /v1/cancel`` / ``engine.cancel``)
+    before it completed; any partial output was discarded server-side.  SSE
+    streams signal this as a terminal ``cancelled`` frame."""
+    code = "request_cancelled"
+    http_status = 409
 
 
 class InternalServerError(ApiError):

@@ -1,31 +1,43 @@
 """RemoteBackend: the network as a fourth pluggable inference backend.
 
 Implements the ``InferenceBackend`` surface over the versioned JSON/SSE wire
-protocol served by ``repro.serve.server`` — stdlib ``urllib`` only, no
+protocol served by ``repro.serve.server`` — stdlib ``http.client`` only, no
 model code, no JAX — so ``Client(RemoteBackend(url))`` (or
 ``Client.connect(url)``) is a drop-in for the artifact/engine/local backends
 and bit-identical to them under injected uniforms (the uniforms cross the
 wire as raw little-endian bytes, and tokens/ages round-trip exactly through
 JSON numbers).
 
+Connection policy: the server speaks HTTP/1.1 with keep-alive, so this
+backend holds **one persistent connection** and pipelines sequential JSON
+calls over it instead of paying a TCP handshake per request (the req/s
+delta is measured by ``benchmarks/run.py http``; pass ``keep_alive=False``
+to get the old socket-per-call behaviour).  A stale pooled socket (server
+restarted, idle timeout) is retried once on a fresh connection.  SSE
+streams are close-delimited and always use a dedicated connection.
+
 The server is the source of truth for validation: a bad request comes back
 as ``{"error": {"code", "message"}}`` and is re-raised here as the *same*
 typed ``repro.api.errors.ApiError`` subclass an in-process backend would
-have raised, so error handling is backend-agnostic too.
+have raised, so error handling is backend-agnostic too.  Cancellation
+(``cancel(request_id)`` -> ``POST /v1/cancel``) propagates to engine slot
+eviction server-side; a stream cancelled mid-flight terminates with a
+``cancelled`` frame, surfaced as ``RequestCancelledError``.
 
 Results keep the serving backend visible: ``result.backend`` is
 ``"remote[engine]"`` etc., recording both the hop and what answered.
 """
 from __future__ import annotations
 
+import http.client
 import json
-import urllib.error
-import urllib.request
-from typing import Iterator, List, Optional, Sequence
+import threading
+from typing import Iterator, List, Optional, Sequence, Tuple
+from urllib.parse import urlsplit
 
 from repro.api.client import InferenceBackend
-from repro.api.errors import (ApiError, InternalServerError,
-                              ProtocolVersionError, error_from_json)
+from repro.api.errors import (InternalServerError, ProtocolVersionError,
+                              error_from_json)
 from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
                                RiskReport, TrajectoryEvent, TrajectoryResult)
 
@@ -36,15 +48,35 @@ class RemoteBackend(InferenceBackend):
     """Client half of the wire protocol (see ``repro.serve.server``)."""
     name = "remote"
 
-    def __init__(self, url: str, *, timeout: float = 300.0):
+    def __init__(self, url: str, *, timeout: float = 300.0,
+                 keep_alive: bool = True):
         self.url = url.rstrip("/")
+        sp = urlsplit(self.url if "//" in self.url else "http://" + self.url)
+        if sp.scheme not in ("http", ""):
+            raise ValueError(f"RemoteBackend speaks plain http, not "
+                             f"{sp.scheme!r}")
+        self._host = sp.hostname or "127.0.0.1"
+        self._port = sp.port or 80
+        self._base_path = sp.path.rstrip("/")
         self.timeout = timeout
-        m = self._request("GET", "/v1/manifest")
-        v = str(m.get("protocol_version"))
-        if v != WIRE_PROTOCOL_VERSION:
-            raise ProtocolVersionError(
-                f"server at {self.url} speaks wire protocol {v!r}; this "
-                f"client supports {WIRE_PROTOCOL_VERSION!r}")
+        self.keep_alive = keep_alive
+        self._conn: Optional[http.client.HTTPConnection] = None
+        self._conn_lock = threading.Lock()
+        #: sockets dialed so far — the keep-alive benchmark/tests assert
+        #: this stays at 1 across sequential JSON calls
+        self.connections_opened = 0
+        try:
+            m = self._request("GET", "/v1/manifest")
+            v = str(m.get("protocol_version"))
+            if v != WIRE_PROTOCOL_VERSION:
+                raise ProtocolVersionError(
+                    f"server at {self.url} speaks wire protocol {v!r}; this "
+                    f"client supports {WIRE_PROTOCOL_VERSION!r}")
+        except BaseException:
+            # a failed handshake raises out of __init__: the caller never
+            # gets the instance, so the pooled socket must not outlive it
+            self.close()
+            raise
         self.server_manifest = m
         self.remote_backend = str(m.get("backend", "?"))
         mm = m.get("model", {})
@@ -55,32 +87,87 @@ class RemoteBackend(InferenceBackend):
         self.death_token = int(mm["death_token"])
 
     # -- wire plumbing -------------------------------------------------------
-    def _request(self, method: str, path: str, payload: Optional[dict] = None,
-                 stream: bool = False):
-        data = (json.dumps(payload).encode("utf-8")
-                if payload is not None else None)
-        req = urllib.request.Request(
-            self.url + path, data=data, method=method,
-            headers={"Content-Type": "application/json",
-                     "Accept": ("text/event-stream" if stream
-                                else "application/json")})
+    def _open(self) -> http.client.HTTPConnection:
+        self.connections_opened += 1
+        return http.client.HTTPConnection(self._host, self._port,
+                                          timeout=self.timeout)
+
+    def _roundtrip(self, conn, method: str, path: str, body, stream: bool):
+        conn.request(method, self._base_path + path, body=body, headers={
+            "Content-Type": "application/json",
+            "Accept": "text/event-stream" if stream else "application/json"})
+        return conn.getresponse()
+
+    def _raise_http(self, status: int, path: str, raw: bytes):
         try:
-            resp = urllib.request.urlopen(req, timeout=self.timeout)
-        except urllib.error.HTTPError as e:
-            body = e.read()
+            err = error_from_json(json.loads(raw.decode("utf-8")))
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            err = InternalServerError(
+                f"HTTP {status} from {self.url}{path}: {raw[:200]!r}")
+        raise err
+
+    def _request(self, method: str, path: str, payload: Optional[dict] = None,
+                 stream: bool = False, pooled: bool = True):
+        body = (json.dumps(payload).encode("utf-8")
+                if payload is not None else None)
+        if stream or not pooled or not self.keep_alive:
+            # dedicated socket: SSE holds its response open until the
+            # ``done`` frame, and /v1/cancel must not queue behind the
+            # pooled connection's in-flight call (the one it cancels)
+            conn = self._open()
             try:
-                raise error_from_json(json.loads(body.decode("utf-8")))
-            except (json.JSONDecodeError, UnicodeDecodeError):
+                resp = self._roundtrip(conn, method, path, body, stream)
+            except OSError as e:
+                conn.close()
                 raise InternalServerError(
-                    f"HTTP {e.code} from {self.url}{path}: "
-                    f"{body[:200]!r}") from None
-        except urllib.error.URLError as e:
-            raise InternalServerError(
-                f"cannot reach {self.url}{path}: {e.reason}") from None
-        if stream:
-            return resp
-        with resp:
-            return json.loads(resp.read().decode("utf-8"))
+                    f"cannot reach {self.url}{path}: {e}") from None
+            if stream:
+                if resp.status >= 400:
+                    raw = resp.read()
+                    conn.close()
+                    self._raise_http(resp.status, path, raw)
+                return resp, conn
+            raw = resp.read()
+            conn.close()
+        else:
+            # A previously-used pooled socket may have been dropped by the
+            # server between calls; ONLY that case is retried (once, on a
+            # fresh connection).  Timeouts and failures on a fresh socket
+            # are never retried — the server may already be executing a
+            # non-idempotent request.
+            _reuse_errors = (http.client.RemoteDisconnected,
+                             ConnectionResetError, BrokenPipeError)
+            with self._conn_lock:
+                for attempt in (0, 1):
+                    fresh = self._conn is None
+                    conn = self._conn if not fresh else self._open()
+                    self._conn = conn
+                    try:
+                        resp = self._roundtrip(conn, method, path, body,
+                                               stream=False)
+                        raw = resp.read()
+                    except (http.client.HTTPException, OSError) as e:
+                        self._conn = None
+                        conn.close()
+                        if attempt == 0 and not fresh \
+                                and isinstance(e, _reuse_errors):
+                            continue          # stale keep-alive socket
+                        raise InternalServerError(
+                            f"cannot reach {self.url}{path}: {e}") from None
+                    if resp.will_close:       # server opted out of reuse
+                        self._conn = None
+                        conn.close()
+                    break
+        if resp.status >= 400:
+            self._raise_http(resp.status, path, raw)
+        return json.loads(raw.decode("utf-8"))
+
+    def close(self) -> None:
+        """Drop the pooled keep-alive connection (idempotent)."""
+        with self._conn_lock:
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None
 
     def _relabel(self, obj):
         obj.backend = f"{self.name}[{obj.backend or self.remote_backend}]"
@@ -105,10 +192,11 @@ class RemoteBackend(InferenceBackend):
         Non-generator wrapper: serialization (``rng``) and server-side
         validation errors raise HERE, at the call — the same eager contract
         as the in-process backends."""
-        resp = self._request("POST", "/v1/stream", req.to_json(), stream=True)
-        return self._parse_sse(resp)
+        resp, conn = self._request("POST", "/v1/stream", req.to_json(),
+                                   stream=True)
+        return self._parse_sse(resp, conn)
 
-    def _parse_sse(self, resp) -> Iterator[TrajectoryEvent]:
+    def _parse_sse(self, resp, conn) -> Iterator[TrajectoryEvent]:
         try:
             event: Optional[str] = None
             data_lines: List[str] = []
@@ -122,7 +210,9 @@ class RemoteBackend(InferenceBackend):
                     payload = json.loads("\n".join(data_lines) or "null")
                     if event == "event":
                         yield TrajectoryEvent.from_json(payload)
-                    elif event == "error":
+                    elif event in ("error", "cancelled"):
+                        # `cancelled` is the terminal frame of /v1/cancel —
+                        # reconstructed as RequestCancelledError by code
                         raise error_from_json(payload)
                     elif event == "done":
                         return
@@ -131,6 +221,19 @@ class RemoteBackend(InferenceBackend):
                 "SSE stream ended without a 'done' frame")
         finally:
             resp.close()
+            conn.close()
+
+    def cancel(self, request_id: str) -> bool:
+        """Server-side cancellation: ``POST /v1/cancel`` evicts the request
+        from its engine slot (blocks freed) and waiters get the structured
+        ``request_cancelled`` error / ``cancelled`` SSE frame.  Sent on a
+        dedicated connection so it can overtake the pooled connection's
+        in-flight call — usually exactly the one being cancelled."""
+        out = self._request("POST", "/v1/cancel",
+                            {"protocol_version": WIRE_PROTOCOL_VERSION,
+                             "request_id": str(request_id)},
+                            pooled=False)
+        return bool(out.get("cancelled"))
 
     def risk(self, tokens: Sequence[int],
              ages: Optional[Sequence[float]] = None, *,

@@ -96,6 +96,9 @@ class GenerateRequest:
     uniforms: Optional[np.ndarray] = None
     seed: int = 0
     rng: Optional[np.random.Generator] = None
+    # client-chosen handle for mid-flight cancellation (``Client.cancel`` /
+    # ``POST /v1/cancel``); additive wire field, omitted when unset
+    request_id: Optional[str] = None
 
     def to_json(self) -> dict:
         """Canonical wire form.  ``rng`` cannot cross a process boundary —
@@ -119,6 +122,8 @@ class GenerateRequest:
             d["death_token"] = int(self.death_token)
         if self.uniforms is not None:
             d["uniforms"] = _encode_array(np.asarray(self.uniforms))
+        if self.request_id is not None:
+            d["request_id"] = str(self.request_id)
         return d
 
     @classmethod
@@ -140,7 +145,9 @@ class GenerateRequest:
                              if d.get("death_token") is not None else None),
                 uniforms=(_decode_array(u, "uniforms")
                           if u is not None else None),
-                seed=int(d.get("seed", 0)))
+                seed=int(d.get("seed", 0)),
+                request_id=(str(d["request_id"])
+                            if d.get("request_id") is not None else None))
         except InvalidRequestError:
             raise
         except (ValueError, TypeError) as e:    # wrong-typed field -> 400,

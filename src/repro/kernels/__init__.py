@@ -1,4 +1,6 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
-from repro.kernels.ops import flash_attention, ssd_intra, tte_sample
+from repro.kernels.ops import (flash_attention, paged_decode_attention,
+                               ssd_intra, tte_sample)
 
-__all__ = ["flash_attention", "ssd_intra", "tte_sample"]
+__all__ = ["flash_attention", "paged_decode_attention", "ssd_intra",
+           "tte_sample"]

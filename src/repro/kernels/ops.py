@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_decode_attention as _paged
 from repro.kernels.ssd_scan import ssd_intra as _ssd_intra
 from repro.kernels.tte_sample import tte_sample as _tte
 
@@ -56,6 +57,29 @@ def ssd_intra(xdt, Bm, Cm, cum, *, interpret: bool = True
               ) -> Tuple[jax.Array, jax.Array]:
     """Intra-chunk SSD: see kernels/ssd_scan.py.  Shapes (BH, C, Q, ·)."""
     return _ssd_intra(xdt, Bm, Cm, cum, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, table, pos, step, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Fused paged decode: block-table gather + online softmax in one pass.
+
+    q: (B, Hq, hd) one roped query token per slot; k/v_pool:
+    (NB, Hkv, bs, hd) shared block pool; table: (B, nbs) pool ids (-1 =
+    unallocated); pos: (NB, bs) absolute positions (-1 = empty); step: (B,)
+    per-slot query positions.  GQA by the same (Hkv, G) grouping as
+    ``decode_attention``.  ``interpret=None`` resolves by backend like
+    ``tte_sample``.  Returns (B, Hq, hd).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, hd = q.shape
+    Hkv = k_pool.shape[1]
+    q4 = q.reshape(B, Hkv, Hq // Hkv, hd)
+    out = _paged(q4, k_pool, v_pool, table, pos, step, window=window,
+                 interpret=interpret)
+    return out.reshape(B, Hq, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("bv", "interpret"))

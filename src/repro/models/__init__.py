@@ -1,9 +1,11 @@
 """Architecture zoo substrate (pure-JAX, pytree parameters)."""
-from repro.models.attention import LayerCache
+from repro.models.attention import LayerCache, PagedCache, PagedLayerView
 from repro.models.model import (decode_step, forward, init_params,
-                                make_decode_cache, mask_padded_positions,
-                                n_attn_apps, param_count)
+                                make_decode_cache, make_paged_decode_cache,
+                                mask_padded_positions, n_attn_apps,
+                                param_count)
 
-__all__ = ["LayerCache", "decode_step", "forward", "init_params",
-           "make_decode_cache", "mask_padded_positions", "n_attn_apps",
+__all__ = ["LayerCache", "PagedCache", "PagedLayerView", "decode_step",
+           "forward", "init_params", "make_decode_cache",
+           "make_paged_decode_cache", "mask_padded_positions", "n_attn_apps",
            "param_count"]

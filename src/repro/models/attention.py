@@ -37,6 +37,48 @@ class LayerCache(NamedTuple):
     pos: jax.Array        # (B, W) int32 absolute position per slot, -1 = empty
 
 
+class PagedCache(NamedTuple):
+    """Paged decode cache: one shared block pool + per-slot block tables.
+
+    Instead of a dense per-slot ring (``LayerCache`` stacked to
+    ``(L, B, Hkv, W, hd)``), K/V live in a pool of fixed-size blocks that a
+    host-side allocator hands out on demand, so resident cache memory scales
+    with *tokens actually held*, not ``slots x max_context`` worst case —
+    the serving lever for Delphi's short-median/long-tail trajectories.
+
+    Leaves:
+      k, v  : (L, num_blocks, Hkv, block_size, hd) — the shared pool.
+              Block 0 is the **trash block**: writes of slots with no
+              allocated destination land there and are never read back.
+      pos   : (num_blocks, block_size) int32 absolute positions, -1 = empty.
+              Layer-independent (every layer writes the same positions).
+      table : (B, blocks_per_slot) int32 pool block ids, -1 = unallocated.
+
+    The logical layout is *exactly* the ring cache factored through one
+    indirection: with ``W = blocks_per_slot * block_size``, the token at
+    absolute position ``p`` of slot ``b`` lives at
+    ``pool[table[b, (p % W) // block_size], p % block_size]`` — the same
+    ``p % W`` ring slot the dense cache uses.  ``paged_gather_layer``
+    therefore reconstructs a bit-identical ``LayerCache`` view, which is
+    what makes the paged engine's trajectories bit-equal to the ring
+    engine's under injected uniforms.
+    """
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+    table: jax.Array
+
+
+class PagedLayerView(NamedTuple):
+    """One layer's slice of a :class:`PagedCache` (the shared ``pos`` /
+    ``table`` plus that layer's pool planes) — what the decode layer scan
+    hands to :func:`decode_attention`."""
+    k: jax.Array          # (num_blocks, Hkv, block_size, hd)
+    v: jax.Array
+    pos: jax.Array        # (num_blocks, block_size)
+    table: jax.Array      # (B, blocks_per_slot)
+
+
 # ---------------------------------------------------------------------------
 # Parameters
 # ---------------------------------------------------------------------------
@@ -178,13 +220,68 @@ def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
     return out[:, :Sq].astype(q.dtype)
 
 
-def decode_attention(q, cache: LayerCache, step, *, window: Optional[int],
+def paged_gather_layer(view: PagedLayerView) -> LayerCache:
+    """Reconstruct the dense ring view of one layer's paged cache.
+
+    Ring slot ``j`` of slot ``b`` is ``pool[table[b, j // bs], j % bs]``;
+    unallocated table entries gather (masked) garbage from the trash block
+    and carry ``pos = -1``, exactly like an empty ring slot — so the result
+    feeds the unchanged :func:`decode_attention` math and the paged decode
+    is bit-identical to the ring decode.  (The dense gather is a transient;
+    the fused no-materialization read lives in
+    ``repro.kernels.paged_decode_attention``.)
+    """
+    B, nbs = view.table.shape
+    bs = view.k.shape[2]
+    W = nbs * bs
+    j = jnp.arange(W)
+    blk = view.table[:, j // bs]                       # (B, W) pool ids
+    off = jnp.broadcast_to(j % bs, (B, W))
+    safe = jnp.maximum(blk, 0)
+    k = view.k[safe, :, off, :].transpose(0, 2, 1, 3)  # (B, Hkv, W, hd)
+    v = view.v[safe, :, off, :].transpose(0, 2, 1, 3)
+    pos = jnp.where(blk >= 0, view.pos[safe, off], -1).astype(jnp.int32)
+    return LayerCache(k=k, v=v, pos=pos)
+
+
+def paged_write_stacked(caches: PagedCache, k_news, v_news,
+                        step) -> PagedCache:
+    """One scatter writes every slot's new token into its pool block.
+
+    k_news/v_news: (L, B, 1, Hkv, hd); ``step`` scalar or (B,) per-slot
+    absolute positions.  A slot whose destination block is unallocated
+    (``table`` entry -1: an idle engine slot) writes to the trash block 0,
+    which no table references — the paged twin of the ring engine's
+    harmless inactive-row writes.
+    """
+    bs = caches.k.shape[3]
+    B, nbs = caches.table.shape
+    W = nbs * bs
+    step = jnp.asarray(step)
+    if step.ndim == 0:
+        step = jnp.broadcast_to(step, (B,))
+    step = step.astype(jnp.int32)
+    jb = jnp.mod(step, W) // bs                         # (B,) table column
+    blk = jnp.take_along_axis(caches.table, jb[:, None], axis=1)[:, 0]
+    dst = jnp.where(blk >= 0, blk, 0)
+    off = jnp.mod(step, bs)
+    k_t = k_news[:, :, 0].transpose(1, 0, 2, 3)         # (B, L, Hkv, hd)
+    v_t = v_news[:, :, 0].transpose(1, 0, 2, 3)
+    k = caches.k.at[:, dst, :, off, :].set(k_t.astype(caches.k.dtype))
+    v = caches.v.at[:, dst, :, off, :].set(v_t.astype(caches.v.dtype))
+    pos = caches.pos.at[dst, off].set(step)
+    return caches._replace(k=k, v=v, pos=pos)
+
+
+def decode_attention(q, cache, step, *, window: Optional[int],
                      q_per_kv: int = 1, k_new=None, v_new=None):
-    """Single-token attention against a ring cache.
+    """Single-token attention against a ring cache (or paged view of one).
 
     q: (B, 1, Hq, hd) roped; cache.k/v: (B, Hkv, W, hd); step: scalar int32
     (absolute position of the query token) or (B,) per-example positions —
     the batched serving engine decodes slots at different depths in one call.
+    A :class:`PagedLayerView` cache dispatches through
+    :func:`paged_gather_layer` first (bit-identical ring reconstruction).
 
     When ``k_new``/``v_new`` (B, 1, Hkv, hd) are given, the cache is treated
     as *read-only* and the new token is attended via an appended logit — the
@@ -192,6 +289,8 @@ def decode_attention(q, cache: LayerCache, step, *, window: Optional[int],
     round-tripping the full cache through scan temporaries).  Ring semantics
     are preserved by masking positions <= step - W.
     """
+    if isinstance(cache, PagedLayerView):
+        cache = paged_gather_layer(cache)
     B, _, Hq, hd = q.shape
     Hkv, W = cache.k.shape[1], cache.k.shape[2]
     G = q_per_kv
@@ -237,6 +336,27 @@ def empty_cache(cfg: ModelConfig, batch: int, width: int, dtype) -> LayerCache:
         k=jnp.zeros((batch, cfg.n_kv_heads, width, cfg.head_dim), dtype),
         v=jnp.zeros((batch, cfg.n_kv_heads, width, cfg.head_dim), dtype),
         pos=jnp.full((batch, width), -1, jnp.int32),
+    )
+
+
+def empty_paged_cache(cfg: ModelConfig, n_layers: int, num_blocks: int,
+                      slots: int, width: int, block_size: int,
+                      dtype) -> PagedCache:
+    """Zeroed block pool + all-unallocated tables for ``slots`` decode rows.
+
+    ``width`` is the logical ring width each slot's table spans; it must be
+    a block multiple so ``p % W`` and ``p % block_size`` agree blockwise.
+    """
+    if width % block_size != 0:
+        raise ValueError(f"paged cache width {width} must be a multiple of "
+                         f"block_size {block_size}")
+    return PagedCache(
+        k=jnp.zeros((n_layers, num_blocks, cfg.n_kv_heads, block_size,
+                     cfg.head_dim), dtype),
+        v=jnp.zeros((n_layers, num_blocks, cfg.n_kv_heads, block_size,
+                     cfg.head_dim), dtype),
+        pos=jnp.full((num_blocks, block_size), -1, jnp.int32),
+        table=jnp.full((slots, width // block_size), -1, jnp.int32),
     )
 
 
@@ -293,13 +413,17 @@ def cache_write(cache: LayerCache, k_new, v_new, step) -> LayerCache:
     return LayerCache(k=k, v=v, pos=pos)
 
 
-def cache_write_stacked(caches: LayerCache, k_news, v_news, step) -> LayerCache:
+def cache_write_stacked(caches, k_news, v_news, step):
     """One scatter for the whole layer stack (the deferred decode write).
 
     caches: (L, B, Hkv, W, hd) leaves; k_news/v_news: (L, B, 1, Hkv, hd).
     ``step`` scalar, or (B,) per-example positions (per-slot engine decode —
-    each example's write lands in its own ring slot).
+    each example's write lands in its own ring slot).  A :class:`PagedCache`
+    dispatches to :func:`paged_write_stacked` (same semantics, one
+    indirection through the block table).
     """
+    if isinstance(caches, PagedCache):
+        return paged_write_stacked(caches, k_news, v_news, step)
     step = jnp.asarray(step)
     k_t = k_news.transpose(0, 1, 3, 2, 4)    # (L, B, Hkv, 1, hd)
     v_t = v_news.transpose(0, 1, 3, 2, 4)

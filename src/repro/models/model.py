@@ -197,6 +197,9 @@ def _transformer_stack_unrolled(layers, x, positions, cfg, *, mode,
                                 cross_caches=None, step=None, cache_width=None,
                                 moe_impl="dense_scan", has_cross=False):
     """Python-loop twin of _transformer_stack (cfg.unroll_layers cost mode)."""
+    if isinstance(caches, attn_lib.PagedCache):
+        raise ValueError("paged KV cache requires the scanned stack "
+                         "(cfg.unroll_layers is a cost-accounting mode)")
     L = jax.tree_util.tree_leaves(layers)[0].shape[0]
     aux = jnp.zeros((), jnp.float32)
     out_caches, out_cross, kvs = [], [], []
@@ -266,6 +269,26 @@ def _transformer_stack(layers, x, positions, cfg, *, mode, memory=None,
     # decode: caches are read-only inside the scan; new-token K/V are
     # collected and written with ONE stacked scatter afterwards (avoids
     # round-tripping the full cache through scan temporaries)
+    if isinstance(caches, attn_lib.PagedCache):
+        # paged decode: the scan carries each layer's pool planes; the
+        # shared block table / positions are closed over (they have no
+        # layer axis).  decode_attention dispatches on the PagedLayerView.
+        if has_cross:
+            raise ValueError("paged KV cache does not support cross-"
+                             "attention stacks")
+        pc = caches
+
+        def body(h, xs):
+            lp, kl, vl = xs
+            view = attn_lib.PagedLayerView(kl, vl, pc.pos, pc.table)
+            h, kv, _, _ = transformer_layer(
+                lp, h, positions, cfg, mode="decode", cache=view, step=step,
+                moe_impl=moe_impl, defer_write=True)
+            return h, kv
+        x, (k_news, v_news) = jax.lax.scan(body, x, (layers, pc.k, pc.v))
+        caches = attn_lib.cache_write_stacked(pc, k_news, v_news, step)
+        return x, caches, None, jnp.zeros((), jnp.float32)
+
     if has_cross:
         def body(h, xs):
             lp, c, xc = xs
@@ -549,6 +572,21 @@ def mask_padded_positions(cache, last_idx):
                 pos=jnp.where((v.pos >= 0) & (v.pos <= li), v.pos, -1))
         return v
     return {k: fix(v) for k, v in cache.items()}
+
+
+def make_paged_decode_cache(cfg: ModelConfig, batch: int, context_len: int,
+                            *, num_blocks: int, block_size: int):
+    """Paged twin of :func:`make_decode_cache`: a shared block pool sized by
+    ``num_blocks`` (block 0 reserved as trash) instead of a dense
+    ``batch x context_len`` ring per slot.  Attention-cache architectures
+    only — recurrent SSM/hybrid state has nothing to page."""
+    t = cfg.arch_type
+    if t not in (cb.DENSE, cb.VLM, cb.MOE):
+        raise ValueError(f"paged KV cache supports attention-cache "
+                         f"architectures (dense/moe/vlm), not {t}")
+    return {"self": attn_lib.empty_paged_cache(
+        cfg, cfg.n_layers, num_blocks, batch, context_len, block_size,
+        act_dtype(cfg))}
 
 
 def make_decode_cache(params, cfg: ModelConfig, batch: int, context_len: int):

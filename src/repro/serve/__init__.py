@@ -1,9 +1,11 @@
 """Serving substrate: batched engine with slot continuous batching, plus the
 HTTP/SSE wire front-end (``repro.serve.server``, imported lazily to keep
 ``import repro.serve`` free of the client API stack)."""
-from repro.serve.engine import BatchedEngine, ReferenceEngine, Request
+from repro.serve.engine import (BatchedEngine, BlockAllocator,
+                                ReferenceEngine, Request)
 
-__all__ = ["BatchedEngine", "ReferenceEngine", "Request", "InferenceServer"]
+__all__ = ["BatchedEngine", "BlockAllocator", "ReferenceEngine", "Request",
+           "InferenceServer"]
 
 
 def __getattr__(name):

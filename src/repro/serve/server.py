@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import itertools
 import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -50,7 +51,8 @@ from typing import Iterator, List, Optional, Tuple
 from urllib.parse import urlsplit
 
 from repro.api.errors import (ApiError, InternalServerError,
-                              InvalidRequestError, UnknownEndpointError)
+                              InvalidRequestError, RequestCancelledError,
+                              UnknownEndpointError)
 from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
                                TrajectoryEvent, TrajectoryResult,
                                check_protocol)
@@ -62,6 +64,7 @@ _ENDPOINTS = {
     "generate_batch": {"method": "POST", "path": "/v1/generate_batch"},
     "risk": {"method": "POST", "path": "/v1/risk"},
     "stream": {"method": "POST", "path": "/v1/stream", "content": "sse"},
+    "cancel": {"method": "POST", "path": "/v1/cancel"},
     "manifest": {"method": "GET", "path": "/v1/manifest"},
     "healthz": {"method": "GET", "path": "/v1/healthz"},
 }
@@ -175,8 +178,18 @@ class InferenceServer:
                 "pending": len(eng.pending),
                 "active_slots": sum(r is not None for r in eng.slot_req),
                 "slots": eng.slots,
+                "memory": eng.pool_stats(),
             }
         return h
+
+    def cancel(self, d: dict) -> dict:
+        check_protocol(d)
+        rid = d.get("request_id") if isinstance(d, dict) else None
+        if not rid:
+            raise InvalidRequestError("missing required field 'request_id'")
+        return {"protocol_version": WIRE_PROTOCOL_VERSION,
+                "request_id": str(rid),
+                "cancelled": bool(self.backend.cancel(str(rid)))}
 
     def generate(self, req: GenerateRequest) -> TrajectoryResult:
         with self._exclusive():
@@ -223,9 +236,14 @@ class InferenceServer:
 
 
 class _Handler(BaseHTTPRequestHandler):
-    """One request per connection (HTTP/1.0 close-delimited, which is what
-    lets SSE stream over the stdlib server without chunked encoding)."""
+    """HTTP/1.1 with keep-alive: JSON responses carry ``Content-Length`` so
+    one connection serves many sequential requests (``RemoteBackend`` holds
+    a persistent connection per backend — the req/s lever
+    ``benchmarks/run.py http`` measures).  SSE responses are the exception:
+    they are close-delimited (no chunked encoding on the stdlib server), so
+    ``/v1/stream`` sends ``Connection: close`` and drops the connection."""
     server_version = SERVER_NAME
+    protocol_version = "HTTP/1.1"
     srv: InferenceServer            # bound by InferenceServer.__init__
 
     # -- plumbing ------------------------------------------------------------
@@ -234,6 +252,7 @@ class _Handler(BaseHTTPRequestHandler):
             BaseHTTPRequestHandler.log_message(self, fmt, *args)
 
     def _send_json(self, obj: dict, status: int = 200) -> None:
+        self._drain_body()
         body = json.dumps(obj).encode("utf-8")
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
@@ -247,10 +266,22 @@ class _Handler(BaseHTTPRequestHandler):
     def _read_json(self) -> dict:
         n = int(self.headers.get("Content-Length") or 0)
         raw = self.rfile.read(n) if n else b""
+        self._body_read = True
         try:
             return json.loads(raw.decode("utf-8") or "null")
         except (json.JSONDecodeError, UnicodeDecodeError) as e:
             raise InvalidRequestError(f"request body is not valid JSON: {e}")
+
+    def _drain_body(self) -> None:
+        """Consume an unread request body before writing a response: with
+        keep-alive, leftover body bytes would be parsed as the NEXT request
+        line, desyncing the connection for the following (valid) call."""
+        if getattr(self, "_body_read", False):
+            return
+        n = int(self.headers.get("Content-Length") or 0)
+        if n:
+            self.rfile.read(n)
+        self._body_read = True
 
     def _sse(self, event: str, obj: dict) -> None:
         self.wfile.write(f"event: {event}\n".encode("utf-8"))
@@ -259,6 +290,7 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- routes --------------------------------------------------------------
     def do_GET(self):          # noqa: N802 (stdlib handler naming)
+        self._body_read = False        # handler instance spans keep-alive
         path = urlsplit(self.path).path
         try:
             if path == "/v1/healthz":
@@ -276,6 +308,7 @@ class _Handler(BaseHTTPRequestHandler):
                 f"{type(e).__name__}: {e}"))
 
     def do_POST(self):         # noqa: N802
+        self._body_read = False        # handler instance spans keep-alive
         path = urlsplit(self.path).path
         try:
             if path == "/v1/generate":
@@ -300,6 +333,12 @@ class _Handler(BaseHTTPRequestHandler):
                     raise InvalidRequestError(
                         "risk body must be a JSON object")
                 self._send_json(self.srv.risk(body).to_json())
+            elif path == "/v1/cancel":
+                body = self._read_json()
+                if not isinstance(body, dict):
+                    raise InvalidRequestError(
+                        "cancel body must be {\"request_id\": ...}")
+                self._send_json(self.srv.cancel(body))
             elif path == "/v1/stream":
                 self._do_stream()
             else:
@@ -328,15 +367,22 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_header("Cache-Control", "no-cache")
         self.send_header("Connection", "close")
         self.end_headers()
+        self.close_connection = True        # SSE is close-delimited
         events: List[TrajectoryEvent] = []
         try:
-            for ev in (*first, *it):
+            # chain lazily: a starred tuple here would drain the WHOLE
+            # generator before the first frame is written, turning SSE into
+            # a buffered-at-completion response (and making mid-stream
+            # cancellation unobservable)
+            for ev in itertools.chain(first, it):
                 events.append(ev)
                 self._sse("event", ev.to_json())
             result = self.srv.backend._result(req, events)
             self._sse("done", result.to_json())
         except (BrokenPipeError, ConnectionResetError):
             pass                                    # client went away
+        except RequestCancelledError as e:          # /v1/cancel mid-stream:
+            self._sse("cancelled", e.to_json())     # terminal frame
         except ApiError as e:                       # mid-stream: headers are
             self._sse("error", e.to_json())         # out — error as a frame
         except Exception as e:                      # noqa: BLE001
@@ -362,8 +408,21 @@ def _build_backend(args):
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.backend == "local":
         return LocalBackend(params, cfg)
-    return EngineBackend.create(params, cfg, slots=args.slots,
-                                max_context=args.max_context)
+    backend = EngineBackend.create(
+        params, cfg, slots=args.slots, max_context=args.max_context,
+        cache=args.cache, blocks=args.blocks, block_size=args.block_size,
+        request_timeout=args.request_timeout)
+    # echo the effective memory budget: the sizing knobs' consequence
+    eng = backend.engine
+    mem = eng.pool_stats()
+    budget = (f"{mem['blocks']} x {args.block_size}-token blocks "
+              f"(pool, {eng.slots} slots admitted by free-block budget)"
+              if eng.paged else
+              f"{eng.slots} slots x {eng.max_context} dense ring")
+    print(f"repro-serve: engine KV cache [{args.cache}] = "
+          f"{mem['cache_bytes'] / 1e6:.1f} MB — {budget}; "
+          f"request timeout {args.request_timeout:.0f}s")
+    return backend
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -386,10 +445,22 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8478,
                     help="0 picks an ephemeral port")
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--max-context", type=int, default=512)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode batch width (max concurrent requests)")
+    ap.add_argument("--max-context", type=int, default=512,
+                    help="per-request KV context (ring width / table span)")
+    ap.add_argument("--cache", choices=("ring", "paged"), default="ring",
+                    help="KV layout: dense per-slot ring, or a shared "
+                         "block pool with free-block admission + preemption")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="--cache paged: pool size in blocks "
+                         "(default: dense-equivalent slots*context/size + 1)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="--cache paged: tokens per block")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--request-timeout", type=float, default=300.0)
+    ap.add_argument("--request-timeout", type=float, default=300.0,
+                    help="seconds before an in-flight request is expired "
+                         "and its slot/blocks reclaimed")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per HTTP request")
     args = ap.parse_args(argv)

@@ -1,13 +1,16 @@
-"""Attention: chunked-flash vs naive, ring caches, GQA, sliding window."""
+"""Attention: chunked-flash vs naive, ring caches, GQA, sliding window,
+and the paged (block pool + block table) twin of the ring cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.models.attention import (LayerCache, cache_from_prefill,
-                                    cache_write, chunked_attention,
-                                    decode_attention, empty_cache)
+from repro.models.attention import (LayerCache, PagedCache, PagedLayerView,
+                                    cache_from_prefill, cache_write,
+                                    cache_write_stacked, chunked_attention,
+                                    decode_attention, empty_cache,
+                                    empty_paged_cache, paged_gather_layer)
 
 
 def _mk(key, B, Hq, Hkv, S, hd):
@@ -118,6 +121,157 @@ def test_seq_shard_attention_flag_noop_on_host(key):
         y1 = forward(p, cfg.replace(seq_shard_attn=True),
                      {"tokens": tokens}, mode="train")["logits"]
     np.testing.assert_allclose(y0, y1, atol=1e-5)
+
+
+def test_cache_from_prefill_wrap_equals_sequential_writes(key):
+    """Ring-wrap edge (S > W): packing a long prefill must equal writing the
+    same tokens one at a time through the ring — slot j holds the LAST token
+    with position % W == j, and evicted positions are gone."""
+    B, Hkv, hd, S, W = 2, 2, 8, 23, 8
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    packed = cache_from_prefill(k, v, pos, W)
+    seq = empty_cache_like(B, Hkv, W, hd)
+    for p in range(S):
+        seq = cache_write(seq, k[:, p:p + 1], v[:, p:p + 1], jnp.int32(p))
+    np.testing.assert_array_equal(packed.pos, seq.pos)
+    np.testing.assert_allclose(packed.k, seq.k, atol=0)
+    np.testing.assert_allclose(packed.v, seq.v, atol=0)
+    # only the last W positions survive
+    assert sorted(np.asarray(packed.pos[0]).tolist()) == list(range(S - W, S))
+
+
+def test_mask_padded_positions_under_wrap(key):
+    """Bucketed prefill pads past the true prompt; when the padded length
+    wraps the ring (S_pad > W) the mask must invalidate every slot holding a
+    padded position WITHOUT touching surviving real ones."""
+    from repro.models.model import mask_padded_positions
+    B, Hkv, hd, W = 1, 1, 4, 8
+    S_real, S_pad = 10, 23                 # both wrap the 8-wide ring
+    k = jnp.arange(B * S_pad * Hkv * hd, dtype=jnp.float32).reshape(
+        B, S_pad, Hkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(S_pad, dtype=jnp.int32)[None],
+                           (B, S_pad))
+    c = cache_from_prefill(k, k, pos, W)
+    st = jax.tree_util.tree_map(lambda a: a[None], c)   # stack L=1
+    masked = mask_padded_positions({"self": st}, np.asarray([S_real - 1]))
+    got = np.asarray(masked["self"].pos[0, 0])
+    # padded positions 10..22 overwrote the whole ring except slots still
+    # holding positions <= 9: after the wrap the ring holds 15..22, so ALL
+    # slots must be invalidated
+    assert (got == -1).all(), got
+
+    # shorter pad: S_pad=12 keeps positions 4..11; slots holding 4..9 stay
+    c2 = cache_from_prefill(k[:, :12], k[:, :12], pos[:, :12], W)
+    st2 = jax.tree_util.tree_map(lambda a: a[None], c2)
+    m2 = mask_padded_positions({"self": st2}, np.asarray([S_real - 1]))
+    got2 = np.asarray(m2["self"].pos[0, 0])
+    kept = sorted(p for p in got2.tolist() if p >= 0)
+    assert kept == [4, 5, 6, 7, 8, 9], got2
+
+
+# ---------------------------------------------------------------------------
+# Paged cache: pool + block-table twin of the ring
+# ---------------------------------------------------------------------------
+def _ring_to_paged(ring: LayerCache, bs: int):
+    """Pack a ring LayerCache into an equivalent single-layer paged pool."""
+    B, Hkv, W, hd = ring.k.shape
+    nbs = W // bs
+    NB = 1 + B * nbs
+    table = np.full((B, nbs), -1, np.int32)
+    pool_k = np.zeros((NB, Hkv, bs, hd), np.float32)
+    pool_v = np.zeros((NB, Hkv, bs, hd), np.float32)
+    pool_pos = np.full((NB, bs), -1, np.int32)
+    nxt = 1
+    rk, rv, rp = (np.asarray(x) for x in (ring.k, ring.v, ring.pos))
+    for b in range(B):
+        for jb in range(nbs):
+            if (rp[b, jb * bs:(jb + 1) * bs] < 0).all():
+                continue
+            table[b, jb] = nxt
+            pool_k[nxt] = rk[b, :, jb * bs:(jb + 1) * bs]
+            pool_v[nxt] = rv[b, :, jb * bs:(jb + 1) * bs]
+            pool_pos[nxt] = rp[b, jb * bs:(jb + 1) * bs]
+            nxt += 1
+    return PagedLayerView(jnp.asarray(pool_k), jnp.asarray(pool_v),
+                          jnp.asarray(pool_pos), jnp.asarray(table))
+
+
+def test_paged_gather_reconstructs_ring_bitwise(key):
+    B, Hkv, hd, S, W, bs = 2, 2, 8, 13, 16, 4
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ring = cache_from_prefill(k, v, pos, W)
+    g = paged_gather_layer(_ring_to_paged(ring, bs))
+    np.testing.assert_array_equal(g.pos, ring.pos)
+    valid = np.asarray(ring.pos) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(g.k).transpose(0, 2, 1, 3)[valid],
+        np.asarray(ring.k).transpose(0, 2, 1, 3)[valid])
+
+
+def test_paged_decode_bit_identical_to_ring(key):
+    """decode_attention over a PagedLayerView == over the ring it factors —
+    bit-identical, including the deferred-write new-token merge (the paged
+    engine's parity claim at the layer level)."""
+    B, Hkv, hd, S, W, bs = 2, 2, 16, 21, 16, 4     # S > W: wrapped ring
+    ks = jax.random.split(key, 5)
+    k = jax.random.normal(ks[0], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    q = jax.random.normal(ks[2], (B, 1, Hkv * 2, hd))
+    kn = jax.random.normal(ks[3], (B, 1, Hkv, hd))
+    vn = jax.random.normal(ks[4], (B, 1, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ring = cache_from_prefill(k, v, pos, W)
+    view = _ring_to_paged(ring, bs)
+    step = jnp.full((B,), S, jnp.int32)
+    for window in (None, 6):
+        o_r = decode_attention(q, ring, step, window=window, q_per_kv=2,
+                               k_new=kn, v_new=vn)
+        o_p = decode_attention(q, view, step, window=window, q_per_kv=2,
+                               k_new=kn, v_new=vn)
+        np.testing.assert_array_equal(np.asarray(o_r), np.asarray(o_p))
+
+
+def test_paged_write_stacked_matches_ring_write(key):
+    """cache_write_stacked dispatches on cache kind; the paged write lands
+    in the table-mapped block and unallocated slots write to trash."""
+    B, Hkv, hd, W, bs, L = 2, 1, 8, 8, 4, 2
+    ks = jax.random.split(key, 3)
+    k = jax.random.normal(ks[0], (B, 6, Hkv, hd))
+    v = jax.random.normal(ks[1], (B, 6, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(6, dtype=jnp.int32)[None], (B, 6))
+    ring = cache_from_prefill(k, v, pos, W)
+    view = _ring_to_paged(ring, bs)
+    pc = PagedCache(k=jnp.stack([view.k] * L), v=jnp.stack([view.v] * L),
+                    pos=view.pos, table=view.table)
+    ring_st = jax.tree_util.tree_map(lambda a: jnp.stack([a] * L), ring)
+    kn = jax.random.normal(ks[2], (L, B, 1, Hkv, hd))
+    step = jnp.asarray([6, 7], jnp.int32)
+    r2 = cache_write_stacked(ring_st, kn, kn, step)
+    p2 = cache_write_stacked(pc, kn, kn, step)
+    assert isinstance(p2, PagedCache)
+    g = paged_gather_layer(PagedLayerView(p2.k[0], p2.v[0], p2.pos, p2.table))
+    np.testing.assert_array_equal(g.pos, r2.pos[0])
+    valid = np.asarray(r2.pos[0]) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(g.k).transpose(0, 2, 1, 3)[valid],
+        np.asarray(r2.k[0]).transpose(0, 2, 1, 3)[valid])
+
+
+def test_empty_paged_cache_shapes_and_validation():
+    from repro.configs import get_config
+    cfg = get_config("delphi-2m", reduced=True)
+    pc = empty_paged_cache(cfg, 3, 9, 4, 32, 8, jnp.float32)
+    assert pc.k.shape == (3, 9, cfg.n_kv_heads, 8, cfg.head_dim)
+    assert pc.table.shape == (4, 4) and (np.asarray(pc.table) == -1).all()
+    assert (np.asarray(pc.pos) == -1).all()
+    with pytest.raises(ValueError, match="multiple"):
+        empty_paged_cache(cfg, 3, 9, 4, 30, 8, jnp.float32)
 
 
 def test_deferred_write_matches_inline(key):

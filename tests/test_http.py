@@ -43,6 +43,15 @@ def _uniforms(max_new, V, seed=42):
     return rng.uniform(size=(max_new, V)).astype(np.float32)
 
 
+def _long_running_uniforms(max_new, cfg, seed=42):
+    """Uniforms that can never sample the death token (u -> 0 makes its
+    competing waiting time huge), so a long request deterministically runs
+    its full max_new instead of flaking out early under the engine RNG."""
+    u = _uniforms(max_new, cfg.vocab_size, seed)
+    u[:, cfg.death_token] = 1e-12
+    return u
+
+
 def _post_raw(url, path, payload):
     req = urllib.request.Request(
         url + path, data=json.dumps(payload).encode(),
@@ -66,7 +75,7 @@ def test_manifest_and_healthz(setup):
     assert m["model"]["vocab_size"] == cfg.vocab_size
     assert m["model"]["has_ages"] is True
     assert set(m["endpoints"]) == {"generate", "generate_batch", "risk",
-                                   "stream", "manifest", "healthz"}
+                                   "stream", "cancel", "manifest", "healthz"}
     with urllib.request.urlopen(server.address + "/v1/healthz") as r:
         h = json.loads(r.read())
     assert h["ok"] and h["engine"]["running"]
@@ -351,3 +360,180 @@ def test_serve_artifact_backend(setup, tmp_path):
         assert [e.token for e in evs] == via_art.tokens
     finally:
         art_server.stop()
+
+
+# ---------------------------------------------------------------------------
+# HTTP/1.1 keep-alive connection reuse
+# ---------------------------------------------------------------------------
+def test_keep_alive_reuses_one_connection(setup):
+    """Sequential JSON calls ride ONE persistent connection (the req/s
+    lever `benchmarks/run.py http` measures); SSE gets its own socket."""
+    _, cfg, server = setup
+    remote = RemoteBackend(server.address)
+    assert remote.connections_opened == 1       # the manifest handshake
+    for _ in range(3):
+        remote.generate(GenerateRequest(tokens=TOKS, ages=AGES, max_new=2))
+    remote.healthz()
+    assert remote.connections_opened == 1
+    list(remote.stream(GenerateRequest(tokens=TOKS, ages=AGES, max_new=2)))
+    assert remote.connections_opened == 2       # SSE is close-delimited
+    remote.generate(GenerateRequest(tokens=TOKS, ages=AGES, max_new=2))
+    assert remote.connections_opened == 2       # back on the pooled socket
+    remote.close()
+
+
+def test_keep_alive_off_dials_per_call(setup):
+    _, _, server = setup
+    remote = RemoteBackend(server.address, keep_alive=False)
+    n0 = remote.connections_opened
+    remote.healthz()
+    remote.healthz()
+    assert remote.connections_opened == n0 + 2
+
+
+def test_keep_alive_survives_stale_socket(setup):
+    """A pooled socket the server has since dropped retries once on a
+    fresh connection instead of failing the call."""
+    _, _, server = setup
+    remote = RemoteBackend(server.address)
+    remote.healthz()
+    remote._conn.close()                        # simulate idle drop
+    assert remote.healthz()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# Cancellation over the wire
+# ---------------------------------------------------------------------------
+def test_cancel_unknown_id(setup):
+    _, _, server = setup
+    remote = Client.connect(server.address)
+    assert remote.cancel("no-such-request") is False
+    status, body = _post_raw(server.address, "/v1/cancel", {})
+    assert status == 400 and body["error"]["code"] == "invalid_request"
+
+
+def test_cancel_uses_dedicated_connection(setup):
+    """/v1/cancel must not queue behind the pooled connection — it usually
+    targets the very call holding that connection."""
+    _, _, server = setup
+    remote = RemoteBackend(server.address)
+    remote.healthz()
+    n0 = remote.connections_opened
+    remote.cancel("whatever")
+    assert remote.connections_opened == n0 + 1
+
+
+def test_unknown_endpoint_with_body_keeps_connection_in_sync(setup):
+    """A 404'd POST whose body was never parsed must drain it: with
+    keep-alive the leftover bytes would otherwise be read as the next
+    request line, failing the following valid call on the connection."""
+    _, _, server = setup
+    remote = RemoteBackend(server.address)
+    with pytest.raises(ApiError) as ei:
+        remote._request("POST", "/v1/generte",        # typo'd endpoint
+                        {"tokens": [1, 2, 3], "junk": "x" * 256})
+    assert ei.value.code == "unknown_endpoint"
+    # same pooled connection must still serve a valid request
+    assert remote.healthz()["ok"]
+    assert remote.connections_opened == 1
+
+
+def test_duplicate_request_id_is_rejected(setup):
+    """A second in-flight request reusing a request_id would clobber the
+    cancel registry — refused as a structured 400."""
+    from repro.api.errors import InvalidRequestError
+    params, cfg, _ = setup
+    backend = EngineBackend.create(params, cfg, slots=1, max_context=512,
+                                   cache="paged", block_size=16)
+    server = InferenceServer(backend, port=0).start()
+    try:
+        remote = Client.connect(server.address)
+        remote.generate(tokens=TOKS, ages=AGES, max_new=2)   # warm
+        results = []
+
+        def blocker():
+            try:
+                results.append(remote.generate(
+                    GenerateRequest(tokens=TOKS, ages=AGES, max_new=480,
+                                    uniforms=_long_running_uniforms(480, cfg),
+                                    request_id="dup")))
+            except ApiError as e:       # cancelled at teardown
+                results.append(e)
+        t = threading.Thread(target=blocker)
+        t.start()
+        time.sleep(0.3)
+        with pytest.raises(InvalidRequestError) as ei:
+            Client.connect(server.address).generate(
+                GenerateRequest(tokens=TOKS, ages=AGES, max_new=2,
+                                request_id="dup"))
+        assert ei.value.code == "invalid_request"
+        backend.cancel("dup")
+        t.join(30)
+    finally:
+        server.stop()
+
+
+def test_sse_streams_per_event_not_buffered(setup):
+    """Frames must hit the wire as events occur: the first SSE frame has
+    to arrive while the request is still in flight (a starred-tuple drain
+    in _do_stream once buffered the whole trajectory until completion,
+    which also made mid-stream cancellation unobservable)."""
+    params, cfg, _ = setup
+    backend = EngineBackend.create(params, cfg, slots=1, max_context=512,
+                                   cache="paged", block_size=16)
+    server = InferenceServer(backend, port=0).start()
+    try:
+        remote = Client.connect(server.address)
+        remote.generate(tokens=TOKS, ages=AGES, max_new=2,
+                        uniforms=_long_running_uniforms(2, cfg))  # warm
+        it = remote.stream(GenerateRequest(
+            tokens=TOKS, ages=AGES, max_new=400,
+            uniforms=_long_running_uniforms(400, cfg)))
+        next(it)
+        eng = backend.engine
+        assert any(r is not None for r in eng.slot_req), \
+            "first frame only arrived after the request completed"
+        n = 1 + sum(1 for _ in it)
+        assert n == 400
+    finally:
+        server.stop()
+
+
+def test_cancel_inflight_stream_emits_cancelled_frame(setup):
+    """Cancel propagates to slot eviction mid-decode; the victim's SSE
+    stream terminates with a `cancelled` frame raised client-side as
+    RequestCancelledError, and the engine leaks nothing.  (stream()
+    returns only once the server commits the SSE body — i.e. after the
+    victim's first event — so by the time cancel fires the victim is
+    decoding in a slot, with ~479 events still to go.)"""
+    from repro.api import RequestCancelledError
+    params, cfg, _ = setup
+    backend = EngineBackend.create(params, cfg, slots=1, max_context=512,
+                                   cache="paged", block_size=16)
+    server = InferenceServer(backend, port=0).start()
+    try:
+        remote = Client.connect(server.address)
+        remote.generate(tokens=TOKS, ages=AGES, max_new=2,
+                        uniforms=_long_running_uniforms(2, cfg))  # warm
+        # throttle the tick: the reduced config decodes hundreds of events
+        # per second, so an unthrottled victim could finish before the
+        # cancel round-trip lands — 20ms/tick gives it a ~10s runway
+        orig_step = backend.engine.step
+        backend.engine.step = lambda: (time.sleep(0.02), orig_step())[1]
+        it = remote.stream(GenerateRequest(
+            tokens=TOKS, ages=AGES, max_new=480,
+            uniforms=_long_running_uniforms(480, cfg),
+            request_id="cancel-me"))
+        got = [next(it)]             # first event: the victim is in-slot
+        assert remote.cancel("cancel-me") is True
+        with pytest.raises(RequestCancelledError) as ei:
+            for ev in it:
+                got.append(ev)
+        assert ei.value.code == "request_cancelled"
+        assert ei.value.http_status == 409
+        assert len(got) < 480        # cut short, not drained
+        h = remote.backend.healthz()
+        assert h["engine"]["memory"]["blocks_used"] == 0
+        assert h["engine"]["memory"]["cache"] == "paged"
+    finally:
+        server.stop()

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 from hypcompat import given, settings, st
 
-from repro.kernels import flash_attention, ssd_intra, tte_sample
+from repro.kernels import (flash_attention, paged_decode_attention, ssd_intra,
+                           tte_sample)
 from repro.kernels import ref
 
 # ---------------------------------------------------------------------------
@@ -48,6 +49,104 @@ def test_flash_bidirectional(key):
     out = flash_attention(q, k, v, causal=False)
     r = ref.attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(out, r, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table gather + softmax in one pass)
+# ---------------------------------------------------------------------------
+PAGED_CASES = [
+    # (B, Hkv, G, hd, bs, nbs, window, dtype)
+    (1, 1, 1, 32, 4, 2, None, jnp.float32),
+    (2, 2, 2, 16, 4, 4, None, jnp.float32),
+    (3, 1, 4, 64, 8, 2, None, jnp.float32),     # strong GQA
+    (2, 2, 1, 16, 4, 4, 6, jnp.float32),        # sliding window
+    (2, 2, 2, 32, 8, 4, None, jnp.bfloat16),    # bf16 pool
+]
+
+
+def _paged_inputs(key, B, Hkv, G, hd, bs, nbs, dtype, *, wrap=False):
+    """A consistent pool: slot b holds n_tok sequential tokens, blockwise."""
+    rng = np.random.default_rng(
+        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    NB = 1 + B * nbs
+    W = nbs * bs
+    k_pool = jnp.asarray(rng.normal(size=(NB, Hkv, bs, hd))).astype(dtype)
+    v_pool = jnp.asarray(rng.normal(size=(NB, Hkv, bs, hd))).astype(dtype)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, hd))).astype(dtype)
+    table = np.full((B, nbs), -1, np.int32)
+    pos = np.full((NB, bs), -1, np.int32)
+    step = np.zeros((B,), np.int32)
+    nxt = 1
+    for b in range(B):
+        n_tok = int(rng.integers(1, W))
+        step[b] = n_tok + (W if wrap else 0)
+        nalloc = -(-n_tok // bs)
+        for jb in range(nalloc):
+            table[b, jb] = nxt
+            for o in range(bs):
+                p = jb * bs + o
+                if p < n_tok:
+                    pos[nxt, o] = p + (W if wrap else 0)
+            nxt += 1
+    return q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(pos), \
+        jnp.asarray(step)
+
+
+@pytest.mark.parametrize("B,Hkv,G,hd,bs,nbs,window,dtype", PAGED_CASES)
+def test_paged_decode_vs_ref(key, B, Hkv, G, hd, bs, nbs, window, dtype):
+    q, k_pool, v_pool, table, pos, step = _paged_inputs(
+        key, B, Hkv, G, hd, bs, nbs, dtype)
+    out = paged_decode_attention(q, k_pool, v_pool, table, pos, step,
+                                 window=window)
+    r = ref.paged_decode_attention_ref(
+        q.reshape(B, Hkv, G, hd).astype(jnp.float32),
+        k_pool.astype(jnp.float32), v_pool.astype(jnp.float32),
+        table, pos, step, window=window)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, Hkv, G, hd), np.float32), r, atol=atol)
+
+
+def test_paged_decode_wrapped_ring_eviction(key):
+    """step >= W with stale pre-wrap positions still in the pool: the
+    kernel's `p > step - W` eviction mask must agree with the oracle (the
+    one clause plain causal masking doesn't cover), and evicted entries
+    must not contribute at all."""
+    B, Hkv, G, hd, bs, nbs = 2, 2, 2, 16, 4, 4
+    W = nbs * bs
+    q, k_pool, v_pool, table, pos, step = _paged_inputs(
+        key, B, Hkv, G, hd, bs, nbs, jnp.float32, wrap=True)
+    # plant stale entries: every other valid position falls back a full
+    # ring width, landing at or below step - W (evicted)
+    pos_np = np.asarray(pos).copy()
+    valid = pos_np >= 0
+    stale = valid & (np.arange(pos_np.shape[1])[None, :] % 2 == 0)
+    pos_np[stale] -= W
+    pos = jnp.asarray(pos_np)
+    assert (pos_np[stale] <= int(step.max()) - W).all()
+    out = paged_decode_attention(q, k_pool, v_pool, table, pos, step)
+    r = ref.paged_decode_attention_ref(
+        q.reshape(B, Hkv, G, hd), k_pool, v_pool, table, pos, step)
+    np.testing.assert_allclose(np.asarray(out.reshape(B, Hkv, G, hd)), r,
+                               atol=2e-5)
+    # pushing evicted entries further into the past changes nothing
+    pos2 = jnp.asarray(np.where(stale, pos_np - 5 * W, pos_np))
+    out2 = paged_decode_attention(q, k_pool, v_pool, table, pos2, step)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_decode_skips_unallocated_blocks(key):
+    """Unallocated table entries are index-clamped to the trash block; its
+    contents must not leak into the output (pl.when skip)."""
+    B, Hkv, G, hd, bs, nbs = 1, 1, 1, 16, 4, 4
+    q, k_pool, v_pool, table, pos, step = _paged_inputs(
+        key, B, Hkv, G, hd, bs, nbs, jnp.float32)
+    out = paged_decode_attention(q, k_pool, v_pool, table, pos, step)
+    # poison the trash block: output must be unchanged
+    k2 = k_pool.at[0].set(1e9)
+    v2 = v_pool.at[0].set(1e9)
+    out2 = paged_decode_attention(q, k2, v2, table, pos, step)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
 # ---------------------------------------------------------------------------

@@ -17,8 +17,9 @@ from repro.api import (AgesLengthMismatchError, AgesRequiredError, ApiError,
                        TrajectoryEvent, TrajectoryResult,
                        WIRE_PROTOCOL_VERSION, error_from_code,
                        error_from_json)
-from repro.api.errors import (InvalidRequestError, RequestTimeoutError,
-                              UnknownEndpointError, UnsupportedOverrideError)
+from repro.api.errors import (InvalidRequestError, RequestCancelledError,
+                              RequestTimeoutError, UnknownEndpointError,
+                              UnsupportedOverrideError)
 
 from hypcompat import given, settings, st
 
@@ -45,9 +46,18 @@ def test_generate_request_roundtrip_full():
 def test_generate_request_roundtrip_minimal():
     d = GenerateRequest(tokens=[7]).to_json()
     assert "ages" not in d and "uniforms" not in d and "max_age" not in d
+    assert "request_id" not in d          # additive field, omitted unset
     back = GenerateRequest.from_json(json.loads(json.dumps(d)))
     assert back.tokens == [7] and back.ages is None
     assert back.uniforms is None and back.rng is None
+    assert back.request_id is None
+
+
+def test_generate_request_request_id_roundtrip():
+    d = GenerateRequest(tokens=[7], request_id="cancel-me").to_json()
+    assert d["request_id"] == "cancel-me"
+    assert GenerateRequest.from_json(
+        json.loads(json.dumps(d))).request_id == "cancel-me"
 
 
 def test_generate_request_uniforms_accept_nested_lists():
@@ -185,6 +195,7 @@ def test_error_codes_stable():
         ProtocolVersionError: ("protocol_version_mismatch", 409),
         UnknownEndpointError: ("unknown_endpoint", 404),
         RequestTimeoutError: ("timeout", 504),
+        RequestCancelledError: ("request_cancelled", 409),
     }
     for cls, (code, status) in expect.items():
         e = cls("boom")
