@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     resident KV bytes: tokens/s, ticks/s,
                                     peak concurrent requests, pool
                                     utilization, preemptions
+  futures_shared / futures_naive    N Monte-Carlo futures per patient:
+                                    prefix-shared engine fork (1 prefill,
+                                    COW tails) vs N independent requests —
+                                    events/s + peak resident KV bytes
   http_generate_p50/p95             wire-protocol serving: concurrent
                                     RemoteBackend clients vs the threaded
                                     HTTP front-end (req/s + latency tails)
@@ -315,7 +319,8 @@ def bench_paged_vs_ring(params, cfg):
          f"{ev_p / dt_p:.1f} events/s, {ticks_p / dt_p:.1f} ticks/s, "
          f"kv_bytes={paged.cache_bytes} peak_concurrent={paged.peak_active} "
          f"peak_pool_util={st['blocks_peak_used'] / max(paged.allocator.capacity, 1):.2f} "
-         f"preemptions={st['preemptions']}")
+         f"preemptions={st['preemptions']} "
+         f"shared_peak={st['shared_blocks_peak']} cow={st['cow_copies']}")
     assert paged.allocator.used == 0, "paged benchmark leaked blocks"
     assert paged.peak_active > ring.peak_active, \
         (paged.peak_active, ring.peak_active)
@@ -323,6 +328,92 @@ def bench_paged_vs_ring(params, cfg):
          f"{paged.peak_active / max(ring.peak_active, 1):.1f}x peak "
          f"concurrent requests at equal KV bytes "
          f"({paged.cache_bytes / max(ring.cache_bytes, 1):.2f}x bytes)")
+
+
+def bench_futures():
+    """The paper's headline workload at serving scale: N Monte-Carlo
+    futures per patient.  `futures_shared` forks N decode slots off ONE
+    prefilled history (prefix blocks shared by reference, tails copy-on-
+    write); `futures_naive` runs the same N continuations as independent
+    requests, each re-prefilling and holding its own KV.  Reports events/s
+    and the PEAK RESIDENT KV bytes actually backing the N futures — the
+    shared path should sit well under 2x a single request's bytes where
+    naive pays ~Nx."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import BatchedEngine, Request
+
+    cfg = get_config("delphi-2m").replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    N, max_new, W, bs = 8, 8, 256, 16
+    # long history, one token past a block boundary: the shared prefix is
+    # 16 blocks and each future's 8 decode writes fit inside its single
+    # copy-on-written tail block
+    S = 241
+    toks = (np.arange(3, 3 + S) % 1200).astype(np.int32)
+    ages = np.linspace(0.0, 60.0, S).astype(np.float32)
+
+    def block_bytes(eng):
+        pc = eng.cache["self"]
+        per = (pc.k.size + pc.v.size) // pc.k.shape[1]
+        return per * pc.k.dtype.itemsize
+
+    def run_shared():
+        eng = BatchedEngine(params, cfg, slots=N, max_context=W,
+                            cache="paged", block_size=bs,
+                            blocks=4 * (W // bs) + 1)
+        eng.sample_futures(toks, ages, n=N, max_new=max_new)   # warm jits
+        eng.allocator.peak_used = 0
+        t0 = time.perf_counter()
+        kids = eng.sample_futures(toks, ages, n=N, max_new=max_new)
+        dt = time.perf_counter() - t0
+        ev = sum(len(k.out_tokens) for k in kids)
+        return ev, dt, eng.allocator.peak_used * block_bytes(eng), eng
+
+    def run_naive():
+        # same pool geometry, no sharing: N independent identical requests
+        eng = BatchedEngine(params, cfg, slots=N, max_context=W,
+                            cache="paged", block_size=bs,
+                            blocks=N * (W // bs) + 1)
+        def submit_all():
+            rs = [Request(tokens=toks.copy(), ages=ages.copy(),
+                          max_new=max_new) for _ in range(N)]
+            for r in rs:
+                eng.submit(r)
+            return rs
+        submit_all(); eng.run()                                # warm jits
+        eng.allocator.peak_used = 0
+        t0 = time.perf_counter()
+        rs = submit_all()
+        eng.run()
+        dt = time.perf_counter() - t0
+        ev = sum(len(r.out_tokens) for r in rs)
+        return ev, dt, eng.allocator.peak_used * block_bytes(eng), eng
+
+    ev_n, dt_n, bytes_n, eng_n = run_naive()
+    ev_s, dt_s, bytes_s, eng_s = run_shared()
+    # one request's resident blocks (plus its growth block when the prompt
+    # lands exactly on a block boundary)
+    single = -(-S // bs) + (1 if S % bs == 0 else 0)
+    single_bytes = single * block_bytes(eng_s)
+    st = eng_s.pool_stats()
+    _row("futures_naive", dt_n * 1e6 / max(ev_n, 1),
+         f"{ev_n / dt_n:.1f} events/s, resident_kv={bytes_n} "
+         f"({bytes_n / single_bytes:.1f}x one request) N={N} S={S}")
+    _row("futures_shared", dt_s * 1e6 / max(ev_s, 1),
+         f"{ev_s / dt_s:.1f} events/s, resident_kv={bytes_s} "
+         f"({bytes_s / single_bytes:.1f}x one request) "
+         f"shared_peak={st['shared_blocks_peak']} cow={st['cow_copies']} "
+         f"forks={st['forks']}")
+    _row("futures_sharing_gain", 0.0,
+         f"{(ev_s / dt_s) / max(ev_n / dt_n, 1e-9):.2f}x events/s and "
+         f"{bytes_n / max(bytes_s, 1):.1f}x less resident KV, "
+         f"fork-shared vs naive-N-requests")
+    assert eng_s.allocator.used == 0 and eng_n.allocator.used == 0, \
+        "futures benchmark leaked blocks"
+    assert bytes_s < 2 * single_bytes, \
+        (f"shared futures resident KV {bytes_s} not < 2x a single "
+         f"request's {single_bytes}")
 
 
 def bench_http():
@@ -493,6 +584,7 @@ BENCHES = {
     "tte": bench_tte_kernel,
     "train": bench_train_step,
     "serve": bench_serving_engine,
+    "futures": bench_futures,
     "http": bench_http,
     "http_keepalive": bench_http_keepalive,
     "calibration": bench_calibration,

@@ -1,6 +1,6 @@
 """CI guard: paged KV-cache engine == ring engine, and no block leaks.
 
-Two phases:
+Four phases:
 
 1. **Parity** — same config, same injected uniforms, same slot count: the
    paged engine's trajectories must be bit-identical to the ring engine's
@@ -12,6 +12,15 @@ Two phases:
 2. **Cancel/preempt/timeout storm** — a deliberately undersized pool plus
    mid-flight cancellations and a zero-second deadline batch must leave
    the allocator with ZERO leaked blocks and every block table empty.
+
+3. **Fork parity** — ``sample_futures`` (hold + fork + COW + prefix index)
+   on both cache layouts must be bit-identical to the scheduler-free
+   ``ring_reference_futures`` oracle under injected uniforms.
+
+4. **Fork/cancel/timeout storm** — concurrent futures fan-outs on an
+   undersized prefix-cached pool with mid-flight child cancellations and
+   an expiring-deadline batch: every refcount must drain to zero and the
+   prefix index must be empty (and the pool fully free) after eviction.
 
 Run:  PYTHONPATH=src python scripts/paged_parity.py
 """
@@ -25,7 +34,7 @@ from repro.api import GenerateRequest, RequestCancelledError
 from repro.api.client import EngineBackend
 from repro.configs import get_config
 from repro.core import init_delphi
-from repro.serve import BatchedEngine, Request
+from repro.serve import BatchedEngine, Request, ring_reference_futures
 
 
 def _uniforms(max_new, V, seed):
@@ -144,12 +153,107 @@ def storm(params, cfg) -> None:
           f"/{eng.allocator.capacity} peak blocks), zero leaked blocks")
 
 
+def fork_parity(params, cfg) -> None:
+    toks = np.asarray([3, 10, 20, 30, 41], np.int32)
+    ages = np.linspace(0.0, 30.0, 5).astype(np.float32)
+    n, max_new, W, K = 4, 6, 64, 4
+    u = _uniforms(n * max_new, cfg.vocab_size, seed=23).reshape(
+        n, max_new, cfg.vocab_size)
+    oracle = ring_reference_futures(params, cfg, toks, ages, n=n,
+                                    max_new=max_new, uniforms=u, slots=K,
+                                    max_context=W)
+    ora = [(list(t), [np.float32(a) for a in a_]) for t, a_ in oracle]
+    for kind, kw in (("ring", {}),
+                     ("paged", {"block_size": 16}),
+                     ("paged", {"block_size": 16, "prefix_cache": True})):
+        eng = BatchedEngine(params, cfg, slots=K, max_context=W, cache=kind,
+                            **kw)
+        for round_ in range(2):          # round 2 hits the prefix index
+            kids = eng.sample_futures(toks, ages, n=n, max_new=max_new,
+                                      uniforms=u)
+            got = [(list(k.out_tokens),
+                    [np.float32(a) for a in k.out_ages]) for k in kids]
+            assert got == ora, \
+                f"forked futures diverged from oracle ({kind} {kw} " \
+                f"round {round_})"
+        if eng.paged:
+            eng.drop_prefix_cache()
+            assert eng.allocator.used == 0
+            assert not eng.pool._refs, "refcounts left after drain"
+    print("fork parity OK: ring/paged/prefix-cached sample_futures "
+          "bit-identical to the oracle (2 rounds each)")
+
+
+def fork_storm(params, cfg) -> None:
+    # undersized prefix-cached pool under concurrent futures fan-outs,
+    # mid-flight child cancellations, then an expiring-deadline batch
+    eng = BatchedEngine(params, cfg, slots=4, max_context=32, cache="paged",
+                        block_size=8, blocks=8, prefix_cache=True).start()
+    all_kids = []
+    try:
+        import threading
+        waves = []
+        for w in range(6):
+            S = 3 + (w % 3)
+            t = threading.Thread(
+                target=lambda w=w, S=S: all_kids.append(eng.sample_futures(
+                    (np.arange(3, 3 + S, dtype=np.int32) + w) % 90,
+                    np.linspace(0.0, 30.0, S).astype(np.float32),
+                    n=3, max_new=10, request_id=f"fut-{w}",
+                    wait_timeout=120.0)))
+            t.start()
+            waves.append(t)
+        time.sleep(0.2)
+        for w in range(0, 6, 2):         # cancel one child of every other
+            eng.cancel(f"fut-{w}/fork-1")
+        for t in waves:
+            t.join(timeout=180)
+        assert not any(t.is_alive() for t in waves), "futures storm hung"
+    finally:
+        eng.stop()
+    kids = [k for wave in all_kids for k in wave]
+    bad = [k for k in kids
+           if k.error is not None
+           and not isinstance(k.error, RequestCancelledError)]
+    assert not bad, [type(k.error).__name__ for k in bad]
+    assert all(k.done for k in kids)
+    # zero-leak with refcounts: drained engine + dropped index -> all free
+    eng.drop_prefix_cache()
+    assert eng.prefix.entries == 0, "prefix index not empty after eviction"
+    assert not eng.pool._refs, f"refcounts not drained: {eng.pool._refs}"
+    assert eng.allocator.used == 0, \
+        f"LEAK: {eng.allocator.used} blocks still allocated"
+    assert (eng._table == -1).all(), "LEAK: block table still references pool"
+
+    # expiring deadlines mid-fork also drain
+    eng2 = BatchedEngine(params, cfg, slots=2, max_context=32, cache="paged",
+                         block_size=8, request_timeout=0.0,
+                         prefix_cache=True)
+    parent = Request(tokens=np.arange(3, 8, dtype=np.int32),
+                     ages=np.linspace(0.0, 30.0, 5).astype(np.float32),
+                     max_new=10, hold=True)
+    eng2.submit(parent)
+    kids2 = eng2.fork(parent.request_id, 3)
+    time.sleep(0.01)
+    eng2.run(max_ticks=200)
+    assert all(k.done for k in kids2)
+    eng2.drop_prefix_cache()
+    assert eng2.allocator.used == 0 and not eng2.pool._refs
+    st = eng.pool_stats()
+    print(f"fork storm OK: {len(kids)} forked futures "
+          f"({st['forks']} forks, {st['cow_copies']} COW copies, "
+          f"{st['preemptions']} preemptions, peak shared "
+          f"{st['shared_blocks_peak']}), refcounts drained, index empty")
+
+
 def main() -> int:
     cfg = get_config("delphi-2m", reduced=True).replace(
         dtype="float32", vocab_size=96, max_seq_len=48, max_age=1e9)
     params = init_delphi(cfg, jax.random.PRNGKey(7))
     parity(params, cfg)
     storm(params, cfg)
+    fork_parity(params, cfg)
+    fork_storm(params, cfg)
     print("paged_parity: all checks passed")
     return 0
 

@@ -13,14 +13,15 @@ from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
                               RequestTimeoutError, RngNotSerializableError,
                               TooLongError, error_from_code, error_from_json)
 from repro.api.remote import RemoteBackend
-from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
-                               RiskItem, RiskReport, TrajectoryEvent,
-                               TrajectoryResult)
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, FuturesRequest,
+                               FuturesResult, GenerateRequest, RiskItem,
+                               RiskReport, TrajectoryEvent, TrajectoryResult)
 
 __all__ = [
     "Client", "InferenceBackend",
     "ArtifactBackend", "EngineBackend", "LocalBackend", "RemoteBackend",
     "GenerateRequest", "TrajectoryEvent", "TrajectoryResult",
+    "FuturesRequest", "FuturesResult",
     "RiskItem", "RiskReport", "WIRE_PROTOCOL_VERSION",
     "ApiError", "EmptyTrajectoryError", "TooLongError", "AgesRequiredError",
     "AgesLengthMismatchError", "RngNotSerializableError",

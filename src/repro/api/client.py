@@ -39,8 +39,9 @@ from repro.sdk.runtime import Runtime
 from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
                               EmptyTrajectoryError, InvalidRequestError,
                               TooLongError, UnsupportedOverrideError)
-from repro.api.schemas import (GenerateRequest, RiskItem, RiskReport,
-                               TrajectoryEvent, TrajectoryResult)
+from repro.api.schemas import (FuturesRequest, FuturesResult, GenerateRequest,
+                               RiskItem, RiskReport, TrajectoryEvent,
+                               TrajectoryResult)
 
 if TYPE_CHECKING:                        # heavy deps stay lazy at runtime:
     from repro.serve.engine import BatchedEngine   # engine/local backends
@@ -249,6 +250,61 @@ class InferenceBackend:
                    for i in order],
             backend=self.name)
 
+    # -- Monte-Carlo futures (the morbidity-risk workload) -------------------
+    def _validate_futures(self, req: FuturesRequest) -> None:
+        self._validate(req.tokens, req.ages)
+        if req.n_futures < 1:
+            raise InvalidRequestError(
+                f"n_futures must be >= 1; got {req.n_futures}")
+        if req.uniforms is not None:
+            u = np.asarray(req.uniforms)
+            if u.ndim != 3 or u.shape[0] < req.n_futures \
+                    or u.shape[1] < req.max_new \
+                    or u.shape[2] != self.vocab_size:
+                raise InvalidRequestError(
+                    f"futures uniforms must have shape (>= n_futures, "
+                    f">= max_new, vocab_size) = (>= {req.n_futures}, "
+                    f">= {req.max_new}, {self.vocab_size}); got "
+                    f"{tuple(u.shape)}")
+
+    def _futures_result(self, req: FuturesRequest,
+                        results: List[TrajectoryResult]) -> FuturesResult:
+        """Aggregate N futures into the shared within-horizon RiskReport —
+        ONE host-side aggregation (``core.risk.futures_risk_items``) for
+        every backend, so identical trajectories give identical reports."""
+        from repro.core.risk import futures_risk_items
+        # len() guard, not truthiness: ages may arrive as a numpy array
+        age0 = (float(req.ages[-1])
+                if req.ages is not None and len(req.ages) else 0.0)
+        items = futures_risk_items(
+            [(r.tokens, r.ages) for r in results], age0, req.horizon,
+            self.vocab_size, top=req.top)
+        report = RiskReport(
+            horizon=req.horizon,
+            items=[RiskItem(token=t, risk=p) for t, p in items],
+            backend=self.name)
+        return FuturesResult(risk=report, trajectories=results,
+                             n_futures=req.n_futures, backend=self.name)
+
+    def sample_futures(self, req: FuturesRequest) -> FuturesResult:
+        """N stochastic continuations of one history, aggregated into a
+        within-horizon ``RiskReport``.  Host-loop backends generate the
+        futures sequentially through their ordinary decode path (the
+        artifact client's paper-faithful fallback); the engine overrides
+        this with prefix-shared ``fork`` admission and the local backend
+        with one vectorized in-graph call."""
+        self._validate_futures(req)
+        rng = np.random.default_rng(req.seed)
+        results = []
+        for i in range(req.n_futures):
+            u = (np.asarray(req.uniforms[i]) if req.uniforms is not None
+                 else rng.uniform(
+                     size=(req.max_new, self.vocab_size)).astype(np.float32))
+            results.append(self.generate(GenerateRequest(
+                tokens=req.tokens, ages=req.ages, max_new=req.max_new,
+                uniforms=u)))
+        return self._futures_result(req, results)
+
 
 # ---------------------------------------------------------------------------
 # Artifact backend (the FAIR client path)
@@ -392,6 +448,38 @@ class LocalBackend(InferenceBackend):
             prompt_tokens=[int(x) for x in req.tokens],
             prompt_ages=[float(x) for x in req.ages],
             backend=self.name)
+
+    def sample_futures(self, req: FuturesRequest) -> FuturesResult:
+        """Vectorized Monte-Carlo futures: all N samples batched through
+        ONE jitted ``generate_trajectories`` call (the ``core.risk.
+        monte_carlo_risk`` sampling path) instead of N sequential decode
+        loops.  Generic-LM configs fall back to the host loop."""
+        if not self.has_ages:
+            return super().sample_futures(req)
+        self._validate_futures(req)
+        from repro.core.sampler import generate_trajectories_jit
+        N, S0 = req.n_futures, len(req.tokens)
+        t = jnp.broadcast_to(
+            jnp.asarray(np.asarray(req.tokens, np.int32))[None], (N, S0))
+        a = jnp.broadcast_to(
+            jnp.asarray(np.asarray(req.ages, np.float32))[None], (N, S0))
+        u = None
+        if req.uniforms is not None:
+            u = jnp.asarray(np.asarray(
+                req.uniforms, np.float32)[:N, :req.max_new])
+        out = generate_trajectories_jit(
+            self.params, self.cfg, t, a, jax.random.PRNGKey(req.seed),
+            max_new=req.max_new, uniforms=u)
+        n_gen = np.asarray(out["n_generated"])
+        toks = np.asarray(out["tokens"])
+        ags = np.asarray(out["ages"])
+        results = [TrajectoryResult(
+            tokens=toks[j, S0:S0 + n_gen[j]].tolist(),
+            ages=[float(x) for x in ags[j, S0:S0 + n_gen[j]]],
+            prompt_tokens=[int(x) for x in req.tokens],
+            prompt_ages=[float(x) for x in req.ages],
+            backend=self.name) for j in range(N)]
+        return self._futures_result(req, results)
 
 
 # ---------------------------------------------------------------------------
@@ -547,6 +635,57 @@ class EngineBackend(InferenceBackend):
     def generate(self, req: GenerateRequest) -> TrajectoryResult:
         return self.generate_batch([req])[0]
 
+    def sample_futures(self, req: FuturesRequest) -> FuturesResult:
+        """Monte-Carlo futures through the engine's prefix-sharing ``fork``:
+        ONE prefill of the history (a held parent slot), then N decode
+        slots sharing every full prefix block by reference — the partial
+        tail copy-on-writes per fork — so N futures cost ~1 prefill and
+        ~1 prefix of KV instead of N.  Bit-identical to the vectorized
+        ``monte_carlo_risk`` oracle under injected uniforms (ring and
+        paged caches alike; the ring engine forks by row copy and simply
+        forgoes the memory savings).  The result carries the pool's
+        sharing telemetry in ``FuturesResult.sharing`` — engine-lifetime
+        cumulative counters snapshotted at completion, not per-request
+        deltas."""
+        self._validate_futures(req)
+        if req.uniforms is None and req.seed != 0:
+            # mirror the generate() contract: the engine's in-graph RNG
+            # would silently ignore a per-request seed — draw the uniforms
+            # host-side from it instead, preserving determinism
+            rng = np.random.default_rng(req.seed)
+            uniforms = rng.uniform(
+                size=(req.n_futures, req.max_new,
+                      self.vocab_size)).astype(np.float32)
+        else:
+            uniforms = req.uniforms
+        children = self.engine.sample_futures(
+            np.asarray(req.tokens, np.int32),
+            (np.asarray(req.ages, np.float32)
+             if req.ages is not None else None),
+            n=req.n_futures, max_new=req.max_new, uniforms=uniforms,
+            request_id=req.request_id, wait_timeout=self.request_timeout)
+        results = []
+        for c in children:
+            if c.error is not None:
+                raise c.error
+            if not c.done:
+                raise RuntimeError("engine stopped before completing a "
+                                   "forked future")
+            results.append(TrajectoryResult(
+                tokens=list(c.out_tokens),
+                ages=[float(a) for a in c.out_ages],
+                prompt_tokens=[int(t) for t in req.tokens],
+                prompt_ages=([float(a) for a in req.ages]
+                             if req.ages is not None else []),
+                backend=self.name))
+        out = self._futures_result(req, results)
+        st = self.engine.pool_stats()
+        out.sharing = {k: st[k] for k in
+                       ("cache", "forks", "preemptions", "shared_blocks",
+                        "shared_blocks_peak", "cow_copies", "prefix_cache")
+                       if k in st}
+        return out
+
     def stream(self, req: GenerateRequest) -> Iterator[TrajectoryEvent]:
         # non-generator wrapper so validation raises HERE, like the other
         # backends — not lazily at the consumer's first next()
@@ -689,6 +828,24 @@ class Client:
         P(next = i, t <= h) = softmax(logits)_i * (1 - e^{-Lambda h}).
         """
         return self.backend.risk(tokens, ages, horizon=horizon, top=top)
+
+    def sample_futures(self, req: Optional[FuturesRequest] = None,
+                       **kw) -> FuturesResult:
+        """N Monte-Carlo continuations of one patient history, aggregated
+        into a within-horizon ``RiskReport`` (plus the trajectories behind
+        it).  Engine-backed clients fan the futures out through
+        prefix-shared ``fork`` slots — ~1 prefill + ~1 prefix's KV for N
+        futures; other backends fall back to vectorized (local) or
+        sequential (artifact) generation.
+
+        >>> client.sample_futures(tokens=[...], ages=[...], n_futures=32)
+        """
+        if req is None:
+            req = FuturesRequest(**kw)
+        elif kw:
+            raise TypeError("pass either a FuturesRequest or keyword "
+                            "arguments, not both")
+        return self.backend.sample_futures(req)
 
     def cancel(self, request_id: str) -> bool:
         """Cancel an in-flight request by the ``request_id`` it was

@@ -38,8 +38,9 @@ from urllib.parse import urlsplit
 from repro.api.client import InferenceBackend
 from repro.api.errors import (InternalServerError, ProtocolVersionError,
                               error_from_json)
-from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
-                               RiskReport, TrajectoryEvent, TrajectoryResult)
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, FuturesRequest,
+                               FuturesResult, GenerateRequest, RiskReport,
+                               TrajectoryEvent, TrajectoryResult)
 
 __all__ = ["RemoteBackend"]
 
@@ -234,6 +235,21 @@ class RemoteBackend(InferenceBackend):
                              "request_id": str(request_id)},
                             pooled=False)
         return bool(out.get("cancelled"))
+
+    def sample_futures(self, req: FuturesRequest) -> FuturesResult:
+        """Monte-Carlo futures over the wire (``POST /v1/futures``): the
+        server fans the N continuations out through its backend — on an
+        engine server, prefix-shared ``fork`` slots — and returns the
+        aggregated ``RiskReport`` plus every trajectory, bit-identical to
+        an in-process engine under injected uniforms (the uniforms cross
+        as raw little-endian bytes)."""
+        out = self._request("POST", "/v1/futures", req.to_json())
+        res = FuturesResult.from_json(out)
+        self._relabel(res)
+        self._relabel(res.risk)
+        for t in res.trajectories:
+            self._relabel(t)
+        return res
 
     def risk(self, tokens: Sequence[int],
              ages: Optional[Sequence[float]] = None, *,

@@ -223,6 +223,74 @@ class TrajectoryResult:
 
 
 @dataclasses.dataclass
+class FuturesRequest:
+    """N Monte-Carlo futures of one patient history — the morbidity-risk
+    workload (``Client.sample_futures`` / ``POST /v1/futures``).
+
+    ``uniforms`` — optional pre-drawn (n_futures, max_new, V) U(0,1), row
+    ``[i, j]`` consumed by future ``i``'s ``j``-th sampled event — makes
+    the whole fan-out deterministic and bit-comparable across backends;
+    otherwise draws derive from ``seed``.  ``horizon``/``top`` shape the
+    aggregated ``RiskReport``.  On engine-backed servers ``request_id``
+    prefixes the forked children's ids (``<id>/fork-<i>``), so individual
+    futures can be cancelled mid-flight."""
+    tokens: Sequence[int]
+    ages: Optional[Sequence[float]] = None
+    n_futures: int = 16
+    max_new: int = 48
+    horizon: float = 5.0
+    top: int = 10
+    uniforms: Optional[np.ndarray] = None
+    seed: int = 0
+    request_id: Optional[str] = None
+
+    def to_json(self) -> dict:
+        d: dict = {
+            "protocol_version": WIRE_PROTOCOL_VERSION,
+            "tokens": [int(t) for t in self.tokens],
+            "n_futures": int(self.n_futures),
+            "max_new": int(self.max_new),
+            "horizon": float(self.horizon),
+            "top": int(self.top),
+            "seed": int(self.seed),
+        }
+        if self.ages is not None:
+            d["ages"] = [float(a) for a in self.ages]
+        if self.uniforms is not None:
+            d["uniforms"] = _encode_array(np.asarray(self.uniforms))
+        if self.request_id is not None:
+            d["request_id"] = str(self.request_id)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FuturesRequest":
+        if not isinstance(d, dict):
+            raise InvalidRequestError("futures body must be a JSON object")
+        check_protocol(d)
+        u = d.get("uniforms")
+        tokens = _require(d, "tokens")
+        try:
+            return cls(
+                tokens=[int(t) for t in tokens],
+                ages=([float(a) for a in d["ages"]]
+                      if d.get("ages") is not None else None),
+                n_futures=int(d.get("n_futures", 16)),
+                max_new=int(d.get("max_new", 48)),
+                horizon=float(d.get("horizon", 5.0)),
+                top=int(d.get("top", 10)),
+                uniforms=(_decode_array(u, "uniforms")
+                          if u is not None else None),
+                seed=int(d.get("seed", 0)),
+                request_id=(str(d["request_id"])
+                            if d.get("request_id") is not None else None))
+        except InvalidRequestError:
+            raise
+        except (ValueError, TypeError) as e:
+            raise InvalidRequestError(
+                f"malformed futures request field: {e}") from e
+
+
+@dataclasses.dataclass
 class RiskItem:
     token: int
     risk: float
@@ -265,3 +333,40 @@ class RiskReport:
                    items=[RiskItem.from_json(it)
                           for it in d.get("items", [])],
                    backend=str(d.get("backend", "")))
+
+
+@dataclasses.dataclass
+class FuturesResult:
+    """Aggregated Monte-Carlo futures: the within-horizon ``RiskReport``
+    plus the N sampled continuations behind it (each a
+    ``TrajectoryResult``, so parity against any other backend is
+    assertable event for event).  ``sharing`` carries the serving engine's
+    pool telemetry snapshotted at completion — engine-LIFETIME cumulative
+    counters (forks, copy-on-write copies, preemptions, prefix-cache hit
+    rate since engine start), not per-request deltas — and is empty for
+    host-loop backends."""
+    risk: RiskReport
+    trajectories: List[TrajectoryResult]
+    n_futures: int
+    backend: str = ""
+    sharing: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "protocol_version": WIRE_PROTOCOL_VERSION,
+            "risk": self.risk.to_json(),
+            "trajectories": [t.to_json() for t in self.trajectories],
+            "n_futures": int(self.n_futures),
+            "backend": self.backend,
+            "sharing": self.sharing,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FuturesResult":
+        check_protocol(d)
+        return cls(risk=RiskReport.from_json(_require(d, "risk")),
+                   trajectories=[TrajectoryResult.from_json(t)
+                                 for t in d.get("trajectories", [])],
+                   n_futures=int(d.get("n_futures", 0)),
+                   backend=str(d.get("backend", "")),
+                   sharing=dict(d.get("sharing") or {}))

@@ -5,6 +5,7 @@ from repro.core.delphi import get_logits, init_delphi, loss_fn
 from repro.core.losses import dual_loss, event_ce, joint_nll, time_nll
 from repro.core.risk import (analytic_next_event_risk,
                              analytic_next_event_risk_np, disease_chapter_map,
+                             engine_oracle_trajectories, futures_risk_items,
                              monte_carlo_risk, next_event_risk)
 from repro.core.sampler import (advance_trajectory_state,
                                 generate_trajectories,
@@ -17,7 +18,8 @@ __all__ = [
     "get_logits", "init_delphi", "loss_fn",
     "dual_loss", "event_ce", "joint_nll", "time_nll",
     "analytic_next_event_risk", "analytic_next_event_risk_np",
-    "disease_chapter_map", "monte_carlo_risk", "next_event_risk",
+    "disease_chapter_map", "engine_oracle_trajectories",
+    "futures_risk_items", "monte_carlo_risk", "next_event_risk",
     "advance_trajectory_state", "generate_trajectories",
     "generate_trajectories_jit", "sample_next_event", "sample_next_event_np",
     "sample_waiting_times",

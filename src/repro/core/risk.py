@@ -19,14 +19,14 @@ the client-side path matches the paper's architecture.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.sampler import generate_trajectories
+from repro.core.sampler import generate_trajectories_jit
 from repro.models import forward
 
 
@@ -60,23 +60,45 @@ def next_event_risk(params, cfg: ModelConfig, tokens, ages, *,
     return analytic_next_event_risk(out["logits"][:, -1], horizon)
 
 
-def monte_carlo_risk(params, cfg: ModelConfig, tokens, ages, rng, *,
+def monte_carlo_risk(params, cfg: ModelConfig, tokens, ages, rng=None, *,
                      horizon: float = 5.0, n_samples: int = 64,
                      max_new: int = 48,
-                     chapter_of: Optional[jax.Array] = None
+                     chapter_of: Optional[jax.Array] = None,
+                     uniforms: Optional[jax.Array] = None,
+                     trajectories: Optional[Dict[str, jax.Array]] = None
                      ) -> Dict[str, jax.Array]:
-    """Sampled multi-event risk for ONE patient.
+    """Sampled multi-event risk for ONE patient — the N-futures oracle.
 
-    tokens/ages: (S,) history.  Returns dict with
+    tokens/ages: (S,) history.  All N futures are drawn through ONE
+    compiled ``generate_trajectories_jit`` call (batched over the sample
+    axis, not a host loop).  ``uniforms`` (n_samples, max_new, V) injects
+    the sampling uniforms for determinism.  ``trajectories`` swaps the
+    sampling backend entirely — pass
+    :func:`engine_oracle_trajectories` output to aggregate futures drawn
+    through the serving engine's exact compiled decode path, which is the
+    bit-parity oracle configuration for ``BatchedEngine.sample_futures``
+    (the engine's forked futures must match it bit for bit under injected
+    uniforms).
+
+    Returns dict with
       ``code_risk`` (V,)      P(code occurs within horizon)
       ``chapter_risk`` (C,)   P(any code of chapter occurs within horizon)
                               (when ``chapter_of`` (V,) int32 is given)
       ``death_risk`` ()       P(Death within horizon)
     """
     S = tokens.shape[0]
-    t = jnp.broadcast_to(tokens[None], (n_samples, S))
-    a = jnp.broadcast_to(ages[None], (n_samples, S))
-    out = generate_trajectories(params, cfg, t, a, rng, max_new=max_new)
+    if trajectories is None:
+        t = jnp.broadcast_to(tokens[None], (n_samples, S))
+        a = jnp.broadcast_to(ages[None], (n_samples, S))
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        u = None if uniforms is None else jnp.asarray(uniforms)
+        out = generate_trajectories_jit(params, cfg, t, a, rng,
+                                        max_new=max_new, uniforms=u)
+    else:
+        out = trajectories
+        n_samples = out["tokens"].shape[0]
+        max_new = out["alive_mask"].shape[1]
     gen_tok = out["tokens"][:, S:]                    # (N, max_new)
     gen_age = out["ages"][:, S:]
     within = out["alive_mask"] & (gen_age <= ages[-1] + horizon)
@@ -91,6 +113,79 @@ def monte_carlo_risk(params, cfg: ModelConfig, tokens, ages, rng, *,
         chap_occ = jnp.clip(occurred @ chap_onehot, 0.0, 1.0)
         res["chapter_risk"] = jnp.mean(chap_occ, axis=0)
     return res
+
+
+def engine_oracle_trajectories(params, cfg: ModelConfig, tokens, ages, *,
+                               n_samples: int, max_new: int, uniforms,
+                               slots: Optional[int] = None,
+                               max_context: int = 512,
+                               **oracle_kw) -> Dict[str, jax.Array]:
+    """N futures drawn through the serving engine's exact compiled decode
+    path (``repro.serve.prefix.ring_reference_futures``), packed into the
+    ``generate_trajectories`` output format so :func:`monte_carlo_risk`
+    can aggregate them via ``trajectories=``.
+
+    This is the bit-parity oracle configuration: under the same injected
+    ``uniforms`` (n_samples, max_new, V) and matching engine geometry
+    (``slots``/``max_context``/...), ``BatchedEngine.sample_futures`` —
+    fork, copy-on-write, prefix sharing and all — must reproduce these
+    trajectories bit for bit.
+    """
+    from repro.serve.prefix import ring_reference_futures   # lazy: core
+    toks = np.asarray(tokens)                               # stays below
+    ags = np.asarray(ages)                                  # serve
+    S = len(toks)
+    futs = ring_reference_futures(
+        params, cfg, toks, ags, n=n_samples, max_new=max_new,
+        uniforms=uniforms, slots=slots, max_context=max_context, **oracle_kw)
+    tok_buf = np.zeros((n_samples, S + max_new), np.int64)
+    age_buf = np.zeros((n_samples, S + max_new), np.float32)
+    alive = np.zeros((n_samples, max_new), bool)
+    tok_buf[:, :S] = toks
+    age_buf[:, :S] = ags
+    for j, (ts, as_) in enumerate(futs):
+        k = len(ts)
+        tok_buf[j, S:S + k] = ts
+        age_buf[j, S:S + k] = np.asarray(as_, np.float32)
+        age_buf[j, S + k:] = (as_[-1] if k else ags[-1])
+        alive[j, :k] = True
+    return {"tokens": jnp.asarray(tok_buf), "ages": jnp.asarray(age_buf),
+            "alive_mask": jnp.asarray(alive),
+            "n_generated": jnp.asarray([len(t) for t, _ in futs], jnp.int32)}
+
+
+def futures_risk_items(trajectories: Sequence[Tuple[Sequence[int],
+                                                    Sequence[float]]],
+                       age0: float, horizon: float, vocab_size: int,
+                       top: int = 10) -> List[Tuple[int, float]]:
+    """Host-side aggregation of N sampled futures into within-horizon
+    code risks: P(code) = fraction of futures in which the code occurs at
+    an age <= age0 + horizon.  The ONE aggregation every ``sample_futures``
+    backend shares (engine, remote server side, local, artifact), so
+    reports are identical whenever the trajectories are.
+
+    The cutoff comparison runs in fp32 — the same arithmetic as the
+    in-graph ``monte_carlo_risk`` mask, so boundary events land on the
+    same side in both.  Futures without ages (generic-LM configs) count
+    every generated token.
+
+    Returns ``[(token, risk), ...]`` sorted by risk, highest first, top-k.
+    """
+    n = max(len(trajectories), 1)
+    cutoff = np.float32(np.float32(age0) + np.float32(horizon))
+    counts = np.zeros(vocab_size, np.int64)
+    for toks, ags in trajectories:
+        if ags is not None and len(ags):     # len(), not truthiness: ages
+            seen = {int(t) for t, a in zip(toks, ags)   # may be np arrays
+                    if np.float32(a) <= cutoff}
+        else:
+            seen = {int(t) for t in toks}
+        for t in seen:
+            if 0 <= t < vocab_size:
+                counts[t] += 1
+    risk = counts / float(n)
+    order = np.argsort(-risk, kind="stable")[:top]
+    return [(int(i), float(risk[i])) for i in order]
 
 
 def disease_chapter_map(vocab_size: int):

@@ -156,9 +156,18 @@ def generate_trajectories(params, cfg: ModelConfig, tokens, ages, rng, *,
             "alive_mask": alive_hist}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "cache_width"))
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "cache_width",
+                                             "max_age", "death_token"))
 def generate_trajectories_jit(params, cfg: ModelConfig, tokens, ages, rng, *,
                               max_new: int = 64,
-                              cache_width: Optional[int] = None):
+                              cache_width: Optional[int] = None,
+                              max_age: Optional[float] = None,
+                              death_token: Optional[int] = None,
+                              uniforms: Optional[jax.Array] = None):
+    """Jitted :func:`generate_trajectories`.  ``uniforms`` (B, max_new, V)
+    may be injected for deterministic batched generation — the vectorized
+    Monte-Carlo risk path draws all N futures through ONE compiled call."""
     return generate_trajectories(params, cfg, tokens, ages, rng,
-                                 max_new=max_new, cache_width=cache_width)
+                                 max_new=max_new, cache_width=cache_width,
+                                 max_age=max_age, death_token=death_token,
+                                 uniforms=uniforms)

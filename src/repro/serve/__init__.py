@@ -3,8 +3,11 @@ HTTP/SSE wire front-end (``repro.serve.server``, imported lazily to keep
 ``import repro.serve`` free of the client API stack)."""
 from repro.serve.engine import (BatchedEngine, BlockAllocator,
                                 ReferenceEngine, Request)
+from repro.serve.prefix import (PrefixIndex, SharedBlockPool,
+                                ring_reference_futures)
 
 __all__ = ["BatchedEngine", "BlockAllocator", "ReferenceEngine", "Request",
+           "SharedBlockPool", "PrefixIndex", "ring_reference_futures",
            "InferenceServer"]
 
 

@@ -13,6 +13,10 @@ Endpoints (all under ``/v1``; schemas are the canonical ``to_json`` forms):
 ``/v1/generate``       POST    GenerateRequest -> TrajectoryResult
 ``/v1/generate_batch`` POST    {"requests": [...]} -> {"results": [...]}
 ``/v1/risk``           POST    {tokens, ages?, horizon?, top?} -> RiskReport
+``/v1/futures``        POST    FuturesRequest -> FuturesResult (N Monte-
+                               Carlo futures of one history, aggregated
+                               into a RiskReport; engine backends fan out
+                               through prefix-shared ``fork`` slots)
 ``/v1/stream``         POST    GenerateRequest -> SSE: one ``event:`` frame
                                per TrajectoryEvent, then ``done`` carrying
                                the assembled TrajectoryResult (``error``
@@ -53,7 +57,8 @@ from urllib.parse import urlsplit
 from repro.api.errors import (ApiError, InternalServerError,
                               InvalidRequestError, RequestCancelledError,
                               UnknownEndpointError)
-from repro.api.schemas import (WIRE_PROTOCOL_VERSION, GenerateRequest,
+from repro.api.schemas import (WIRE_PROTOCOL_VERSION, FuturesRequest,
+                               FuturesResult, GenerateRequest,
                                TrajectoryEvent, TrajectoryResult,
                                check_protocol)
 
@@ -63,6 +68,7 @@ _ENDPOINTS = {
     "generate": {"method": "POST", "path": "/v1/generate"},
     "generate_batch": {"method": "POST", "path": "/v1/generate_batch"},
     "risk": {"method": "POST", "path": "/v1/risk"},
+    "futures": {"method": "POST", "path": "/v1/futures"},
     "stream": {"method": "POST", "path": "/v1/stream", "content": "sse"},
     "cancel": {"method": "POST", "path": "/v1/cancel"},
     "manifest": {"method": "GET", "path": "/v1/manifest"},
@@ -200,6 +206,10 @@ class InferenceServer:
         with self._exclusive():
             return self.backend.generate_batch(reqs)
 
+    def sample_futures(self, req: FuturesRequest) -> FuturesResult:
+        with self._exclusive():
+            return self.backend.sample_futures(req)
+
     def risk(self, d: dict):
         check_protocol(d)
         tokens = d.get("tokens")
@@ -333,6 +343,9 @@ class _Handler(BaseHTTPRequestHandler):
                     raise InvalidRequestError(
                         "risk body must be a JSON object")
                 self._send_json(self.srv.risk(body).to_json())
+            elif path == "/v1/futures":
+                req = FuturesRequest.from_json(self._read_json())
+                self._send_json(self.srv.sample_futures(req).to_json())
             elif path == "/v1/cancel":
                 body = self._read_json()
                 if not isinstance(body, dict):
@@ -408,10 +421,17 @@ def _build_backend(args):
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.backend == "local":
         return LocalBackend(params, cfg)
+    # the prefix cache rides the paged pool: default it on there, refuse a
+    # ring engine asked for it explicitly (no shareable blocks to index)
+    prefix_cache = (args.cache == "paged" if args.prefix_cache is None
+                    else args.prefix_cache)
+    if prefix_cache and args.cache != "paged":
+        raise SystemExit("repro-serve: --prefix-cache requires --cache "
+                         "paged (the ring layout has no shareable blocks)")
     backend = EngineBackend.create(
         params, cfg, slots=args.slots, max_context=args.max_context,
         cache=args.cache, blocks=args.blocks, block_size=args.block_size,
-        request_timeout=args.request_timeout)
+        request_timeout=args.request_timeout, prefix_cache=prefix_cache)
     # echo the effective memory budget: the sizing knobs' consequence
     eng = backend.engine
     mem = eng.pool_stats()
@@ -421,6 +441,7 @@ def _build_backend(args):
               f"{eng.slots} slots x {eng.max_context} dense ring")
     print(f"repro-serve: engine KV cache [{args.cache}] = "
           f"{mem['cache_bytes'] / 1e6:.1f} MB — {budget}; "
+          f"prefix cache {'on' if prefix_cache else 'off'}; "
           f"request timeout {args.request_timeout:.0f}s")
     return backend
 
@@ -457,6 +478,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(default: dense-equivalent slots*context/size + 1)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="--cache paged: tokens per block")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="index admitted prompts' KV blocks so identical "
+                         "history prefixes admit by reference (default on "
+                         "with --cache paged)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable the prefix index")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--request-timeout", type=float, default=300.0,
                     help="seconds before an in-flight request is expired "

@@ -75,7 +75,8 @@ def test_manifest_and_healthz(setup):
     assert m["model"]["vocab_size"] == cfg.vocab_size
     assert m["model"]["has_ages"] is True
     assert set(m["endpoints"]) == {"generate", "generate_batch", "risk",
-                                   "stream", "cancel", "manifest", "healthz"}
+                                   "futures", "stream", "cancel",
+                                   "manifest", "healthz"}
     with urllib.request.urlopen(server.address + "/v1/healthz") as r:
         h = json.loads(r.read())
     assert h["ok"] and h["engine"]["running"]
