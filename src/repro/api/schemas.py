@@ -95,6 +95,9 @@ class GenerateRequest:
     death_token: Optional[int] = None
     uniforms: Optional[np.ndarray] = None
     seed: int = 0
+    # repro-lint: disable=RL004 rng is host-only by design: to_json rejects
+    # it (RngNotSerializableError) and from_json can never reconstruct live
+    # PRNG state, so it intentionally does not round-trip
     rng: Optional[np.random.Generator] = None
     # client-chosen handle for mid-flight cancellation (``Client.cancel`` /
     # ``POST /v1/cancel``); additive wire field, omitted when unset

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal: bool = True,
+def flash_attention_ref(q, k, v, *, causal: bool = True,
                   window: Optional[int] = None) -> jax.Array:
     """q: (B, Hq, S, hd); k, v: (B, Hkv, T, hd).  GQA by head repetition."""
     B, Hq, S, hd = q.shape

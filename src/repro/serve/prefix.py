@@ -63,7 +63,7 @@ class SharedBlockPool:
 
     def __init__(self, allocator):
         self.allocator = allocator
-        self._refs: Dict[int, int] = {}
+        self._refs: Dict[int, int] = {}                    # guarded-by: engine-thread
         #: jitted block copies triggered by a write into a shared block
         self.cow_copies = 0
         #: high-water mark of concurrently shared (refcount >= 2) blocks
@@ -105,7 +105,7 @@ class SharedBlockPool:
         return n
 
     # -- ownership ------------------------------------------------------------
-    def alloc(self, n: int, *, evict: bool = True) -> Optional[List[int]]:
+    def alloc(self, n: int, *, evict: bool = True) -> Optional[List[int]]:  # repro-lint: engine-thread-only
         """n exclusively-owned blocks (refcount 1), or None — after trying
         to make room by LRU-evicting prefix-index entries."""
         if evict and self.index is not None and n > self.allocator.free:
@@ -116,7 +116,7 @@ class SharedBlockPool:
                 self._refs[i] = 1
         return ids
 
-    def share(self, ids: List[int]) -> None:
+    def share(self, ids: List[int]) -> None:  # repro-lint: engine-thread-only
         """Attach one more reference to each block (fork / prefix admit /
         index registration)."""
         for i in ids:
@@ -126,7 +126,7 @@ class SharedBlockPool:
             self._refs[i] = r + 1
         self.peak_shared = max(self.peak_shared, self.shared_blocks)
 
-    def release(self, ids: List[int]) -> None:
+    def release(self, ids: List[int]) -> None:  # repro-lint: engine-thread-only
         """Drop one reference per block; frees into the allocator at 0."""
         for i in ids:
             r = self._refs.get(i)
@@ -138,16 +138,20 @@ class SharedBlockPool:
             else:
                 self._refs[i] = r - 1
 
-    def refcount(self, block_id: int) -> int:
+    def refcount(self, block_id: int) -> int:  # repro-lint: engine-thread-only
         return self._refs.get(block_id, 0)
 
     @property
     def shared_blocks(self) -> int:
         """Physical blocks currently referenced by more than one owner."""
+        # repro-lint: disable=RL001 GIL-atomic counter scan; the only
+        # cross-thread caller is engine.pool_stats, holding the engine lock
         return sum(1 for r in self._refs.values() if r > 1)
 
     @property
     def total_refs(self) -> int:
+        # repro-lint: disable=RL001 GIL-atomic counter scan; the only
+        # cross-thread caller is engine.pool_stats, holding the engine lock
         return sum(self._refs.values())
 
 
@@ -202,8 +206,9 @@ class PrefixIndex:
         self.pool = pool
         self.block_size = block_size
         self.max_entries = max_entries
-        self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
-        self._chain: Dict[bytes, Tuple[int, bytes]] = {}  # digest->(blk,key)
+        self._entries: "OrderedDict[bytes, _Entry]" = \
+            OrderedDict()                                  # guarded-by: engine-thread
+        self._chain: Dict[bytes, Tuple[int, bytes]] = {}   # guarded-by: engine-thread
         pool.index = self
         self.hits = 0           # complete-entry (no-prefill) admissions
         self.partial_hits = 0   # admissions that shared >= 1 full block
@@ -240,7 +245,7 @@ class PrefixIndex:
         history is O(S) and admission probes run under the engine lock)."""
         return self._digests(tokens, ages)
 
-    def match_run(self, full_digests: List[bytes]) -> List[int]:
+    def match_run(self, full_digests: List[bytes]) -> List[int]:  # repro-lint: engine-thread-only
         """Longest resident run of full-block ids for a digest chain."""
         out: List[int] = []
         for d in full_digests:
@@ -254,7 +259,7 @@ class PrefixIndex:
         """Longest resident run of full-block ids for this history."""
         return self.match_run(self._digests(tokens, ages)[0])
 
-    def lookup_key(self, key: bytes) -> Optional[_Entry]:
+    def lookup_key(self, key: bytes) -> Optional[_Entry]:  # repro-lint: engine-thread-only
         """Complete entry exactly matching a whole-prompt key."""
         e = self._entries.get(key)
         return e if e is not None and e.complete else None
@@ -263,7 +268,7 @@ class PrefixIndex:
         """Exact whole-prompt match against a complete entry."""
         return self.lookup_key(self._digests(tokens, ages)[1])
 
-    def touch(self, entry: _Entry) -> None:
+    def touch(self, entry: _Entry) -> None:  # repro-lint: engine-thread-only
         """An admission actually used this entry: bump MRU + hit count."""
         self._entries.move_to_end(entry.key)
         entry.hits += 1
@@ -278,7 +283,7 @@ class PrefixIndex:
         return hashlib.blake2b(prev + S.to_bytes(8, "little"),
                                digest_size=16).digest()
 
-    def register(self, tokens, ages, blocks: List[int], *, S: int,
+    def register(self, tokens, ages, blocks: List[int], *, S: int,  # repro-lint: engine-thread-only
                  age0: float, logits=None,
                  digests: Optional[Tuple[List[bytes], bytes]] = None
                  ) -> None:
@@ -307,7 +312,7 @@ class PrefixIndex:
             victim = self._freeing_victim() or next(iter(self._entries))
             self._evict_entry(victim)
 
-    def _evict_entry(self, key: bytes) -> int:
+    def _evict_entry(self, key: bytes) -> int:  # repro-lint: engine-thread-only
         e = self._entries.pop(key)
         for d in e.chain:
             owner = self._chain.get(d)
@@ -318,10 +323,10 @@ class PrefixIndex:
         self.evictions += 1
         return self.pool.free - before
 
-    def _evict_one(self) -> int:
+    def _evict_one(self) -> int:  # repro-lint: engine-thread-only
         return self._evict_entry(next(iter(self._entries)))    # LRU head
 
-    def _index_block_refs(self) -> Dict[int, int]:
+    def _index_block_refs(self) -> Dict[int, int]:  # repro-lint: engine-thread-only
         """block id -> how many index entries hold a reference to it."""
         counts: Dict[int, int] = {}
         for e in self._entries.values():
@@ -329,7 +334,7 @@ class PrefixIndex:
                 counts[b] = counts.get(b, 0) + 1
         return counts
 
-    def _freeing_victim(self) -> Optional[bytes]:
+    def _freeing_victim(self) -> Optional[bytes]:  # repro-lint: engine-thread-only
         """LRU-most entry whose eviction makes progress toward freeing
         memory: some of its blocks are held ONLY by index entries (a block
         shared between two cached entries frees once both go — picking
@@ -344,7 +349,7 @@ class PrefixIndex:
                 return key
         return None
 
-    def evict(self, need_blocks: Optional[int] = None) -> int:
+    def evict(self, need_blocks: Optional[int] = None) -> int:  # repro-lint: engine-thread-only
         """Make room: LRU-evict entries until ``need_blocks`` blocks have
         actually freed, skipping pinned entries (see
         :meth:`_freeing_victim`).  Loops to a fixpoint, so blocks shared
@@ -379,10 +384,14 @@ class PrefixIndex:
     # -- stats ---------------------------------------------------------------
     @property
     def entries(self) -> int:
+        # repro-lint: disable=RL001 GIL-atomic counter scan; the only
+        # cross-thread caller is engine.pool_stats, holding the engine lock
         return len(self._entries)
 
     @property
     def cached_blocks(self) -> int:
+        # repro-lint: disable=RL001 GIL-atomic counter scan; the only
+        # cross-thread caller is engine.pool_stats, holding the engine lock
         return len({b for e in self._entries.values() for b in e.blocks})
 
     def stats(self) -> Dict[str, float]:

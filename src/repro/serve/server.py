@@ -177,15 +177,9 @@ class InferenceServer:
         h = {"ok": True, "backend": self.backend.name,
              "protocol_version": WIRE_PROTOCOL_VERSION}
         if self._is_engine:
-            eng = self.backend.engine
-            h["engine"] = {
-                "running": eng.running,
-                "ticks": eng.ticks,
-                "pending": len(eng.pending),
-                "active_slots": sum(r is not None for r in eng.slot_req),
-                "slots": eng.slots,
-                "memory": eng.pool_stats(),
-            }
+            # one locked snapshot from the engine rather than poking its
+            # guarded fields from this handler thread (RL001)
+            h["engine"] = self.backend.engine.health_stats()
         return h
 
     def cancel(self, d: dict) -> dict:

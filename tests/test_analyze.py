@@ -1,0 +1,414 @@
+"""repro-lint (tools/analyze): per-rule fixtures + repo self-run.
+
+Each rule gets a fixture it MUST flag (positive) and a near-identical one
+it must NOT flag (negative), plus suppression/baseline semantics and a
+self-run over ``src/repro`` asserting the tree is clean modulo the
+committed baseline.  Fixtures are parsed, never imported, so they don't
+need to be runnable.
+"""
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:       # tests run with PYTHONPATH=src;
+    sys.path.insert(0, str(REPO_ROOT))   # `tools` lives at the repo root
+
+from tools.analyze import baseline as baseline_mod  # noqa: E402
+from tools.analyze.cli import main as cli_main, run_lint  # noqa: E402
+from tools.analyze.wire import FROZEN_WIRE_V1  # noqa: E402
+
+
+def make_project(tmp_path, files):
+    """Write {relpath: source} and lint it (no baseline)."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint(tmp_path)
+
+
+def rules_of(res):
+    return [f.rule for f in res.new]
+
+
+# ---------------------------------------------------------------------------
+# RL001 lock discipline
+# ---------------------------------------------------------------------------
+RL001_POSITIVE = """
+    import threading
+
+    class Eng:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.pending = []        # guarded-by: _lock
+            self.slot_req = []       # guarded-by: engine-thread
+
+        def submit(self, r):
+            with self._lock:
+                self.pending.append(r)      # locked: ok
+
+        def bad_queue_peek(self):
+            return len(self.pending)        # RL001: unlocked read
+
+        def bad_slot_peek(self):
+            return self.slot_req            # RL001: wrong thread
+
+        def step(self):  # repro-lint: engine-thread-only
+            return self.pending, self.slot_req   # both exempt
+
+        def holds(self):  # repro-lint: holds=_lock
+            return self.pending[0]          # caller owns the lock: ok
+"""
+
+
+def test_rl001_flags_unguarded_access(tmp_path):
+    res = make_project(tmp_path, {"src/repro/serve/eng.py": RL001_POSITIVE})
+    assert rules_of(res) == ["RL001", "RL001"]
+    msgs = " ".join(f.message for f in res.new)
+    assert "bad_queue_peek" in msgs and "bad_slot_peek" in msgs
+    # the disciplined accesses stay silent
+    assert "submit" not in msgs and "`Eng.step`" not in msgs
+
+
+def test_rl001_foreign_access(tmp_path):
+    res = make_project(tmp_path, {
+        "src/repro/serve/eng.py": RL001_POSITIVE,
+        "src/repro/serve/web.py": """
+            class Handler:
+                def healthz(self, eng):
+                    return len(eng.pending)     # RL001: foreign access
+        """,
+        "src/repro/serve/other.py": """
+            class RefEngine:
+                def __init__(self):
+                    self.pending = []           # its own field, unguarded
+
+                def drain(self):
+                    return self.pending         # not a foreign access
+        """,
+    })
+    foreign = [f for f in res.new if "foreign access" in f.message]
+    assert len(foreign) == 1
+    assert foreign[0].path.endswith("web.py")
+
+
+def test_rl001_negative_all_locked(tmp_path):
+    res = make_project(tmp_path, {"src/repro/serve/eng.py": """
+        import threading
+
+        class Eng:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.pending = []    # guarded-by: _lock
+
+            def submit(self, r):
+                with self._lock:
+                    self.pending.append(r)
+    """})
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# RL002 trace purity
+# ---------------------------------------------------------------------------
+def test_rl002_flags_host_syncs(tmp_path):
+    res = make_project(tmp_path, {"src/repro/core/fn.py": """
+        import functools
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def bad(x):
+            if x > 0:            # tracer-dependent control flow
+                x = x + 1
+            y = float(x)         # host cast
+            z = np.abs(x)        # numpy on a tracer
+            x.item()             # explicit sync
+            return x
+    """})
+    assert rules_of(res) == ["RL002"] * 4
+    msgs = " ".join(f.message for f in res.new)
+    for needle in ("`if` on a traced value", "host cast `float()`",
+                   "`np.abs` call on a traced value", "host sync `.item()`"):
+        assert needle in msgs, needle
+
+
+def test_rl002_static_args_and_helpers_are_clean(tmp_path):
+    res = make_project(tmp_path, {"src/repro/core/fn.py": """
+        import functools
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @functools.partial(jax.jit, static_argnames=("cfg", "n"))
+        def good(x, *, cfg, n):
+            if cfg.age_encoding:        # static arg attribute: ok
+                x = x + 1
+            B, S = x.shape              # shape math is trace-static
+            pad = (-S) % max(n, 1)
+            if pad == 0:                # derived static local: ok
+                x = x * 2
+            lim = cfg.max_age if n is not None else np.inf   # np attr: ok
+            return _helper(x, cfg), lim
+
+        def _helper(x, cfg):
+            if cfg.age_encoding:        # static-ness propagates into helpers
+                x = x - 1
+            return {k: x[k] for k in x}   # pytree-key iteration: ok
+
+        def untraced(x):
+            return float(x) if x > 0 else x.item()   # host code: not scanned
+    """})
+    assert res.new == []
+
+
+def test_rl002_closure_mutation(tmp_path):
+    res = make_project(tmp_path, {"src/repro/core/fn.py": """
+        import jax
+
+        @jax.jit
+        def leaky(x):
+            acc = []
+            def body(i, s):
+                acc.append(i)       # escapes the trace body
+                return s
+            return jax.lax.fori_loop(0, 3, body, x)
+    """})
+    assert rules_of(res) == ["RL002"]
+    assert "mutation `.append()`" in res.new[0].message
+
+
+# ---------------------------------------------------------------------------
+# RL003 kernel <-> oracle pairing
+# ---------------------------------------------------------------------------
+RL003_KERNEL = """
+    def fused_scan(x):
+        return x
+
+    def _private_helper(x):
+        return x
+"""
+
+
+def test_rl003_missing_oracle_and_test(tmp_path):
+    res = make_project(tmp_path, {
+        "src/repro/kernels/fused.py": RL003_KERNEL,
+        "src/repro/kernels/ref.py": "def other_ref(x):\n    return x\n",
+        "tests/test_none.py": "def test_nothing():\n    pass\n",
+    })
+    assert rules_of(res) == ["RL003"]
+    assert "no `fused_scan_ref` oracle" in res.new[0].message
+
+    # oracle present but no parity test naming both sides
+    res = make_project(tmp_path, {
+        "src/repro/kernels/ref.py":
+            "def fused_scan_ref(x):\n    return x\n",
+    })
+    assert rules_of(res) == ["RL003"]
+    assert "parity test missing" in res.new[0].message
+
+
+def test_rl003_paired_is_clean(tmp_path):
+    res = make_project(tmp_path, {
+        "src/repro/kernels/fused.py": RL003_KERNEL,
+        "src/repro/kernels/ref.py":
+            "def fused_scan_ref(x):\n    return x\n",
+        "tests/test_fused.py": """
+            def test_parity():
+                assert fused_scan(1) == fused_scan_ref(1)
+        """,
+    })
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# RL004 wire stability
+# ---------------------------------------------------------------------------
+def errors_src(table):
+    lines = ["class ApiError(ValueError):",
+             "    code = 'bad_request'",
+             "    http_status = 400",
+             ""]
+    for i, (code, status) in enumerate(sorted(table.items())):
+        lines += [f"class E{i}(ApiError):",
+                  f"    code = {code!r}",
+                  f"    http_status = {status}",
+                  ""]
+    return "\n".join(lines)
+
+
+def test_rl004_frozen_table_round_trip(tmp_path):
+    res = make_project(
+        tmp_path, {"src/repro/api/errors.py": errors_src(FROZEN_WIRE_V1)})
+    assert res.new == []
+
+
+def test_rl004_status_drift_new_code_and_removal(tmp_path):
+    drifted = dict(FROZEN_WIRE_V1)
+    drifted["timeout"] = 500                 # drift
+    drifted["brand_new"] = 418               # unfrozen addition
+    del drifted["internal"]                  # removal
+    res = make_project(
+        tmp_path, {"src/repro/api/errors.py": errors_src(drifted)})
+    msgs = " ".join(f.message for f in res.new)
+    assert rules_of(res) == ["RL004"] * 3
+    assert "frozen v1 table says 504" in msgs
+    assert "new wire code `brand_new`" in msgs
+    assert "`internal` has no ApiError subclass" in msgs
+
+
+def test_rl004_duplicate_code(tmp_path):
+    src = errors_src(FROZEN_WIRE_V1) + (
+        "class Dup(ApiError):\n"
+        "    code = 'timeout'\n"
+        "    http_status = 504\n")
+    res = make_project(tmp_path, {"src/repro/api/errors.py": src})
+    assert rules_of(res) == ["RL004"]
+    assert "registered by both" in res.new[0].message
+
+
+SCHEMAS_SRC = """
+    import dataclasses
+
+    def check_protocol(d):
+        pass
+
+    @dataclasses.dataclass
+    class Req:
+        a: int
+        b: int = 0
+
+        def to_json(self):
+            return {"a": self.a{MAYBE_B}}
+
+        @classmethod
+        def from_json(cls, d):
+            check_protocol(d)
+            return cls(a=d["a"], b=d.get("b", 0))
+"""
+
+
+def test_rl004_schema_field_must_round_trip(tmp_path):
+    src = SCHEMAS_SRC.replace("{MAYBE_B}", "")
+    res = make_project(tmp_path, {"src/repro/api/schemas.py": src})
+    assert rules_of(res) == ["RL004"]
+    assert "`Req.b` does not appear in `to_json`" in res.new[0].message
+
+    src = SCHEMAS_SRC.replace("{MAYBE_B}", ", 'b': self.b")
+    res = make_project(tmp_path, {"src/repro/api/schemas.py": src})
+    assert res.new == []
+
+
+def test_rl004_handler_protocol_check(tmp_path):
+    res = make_project(tmp_path, {
+        "src/repro/api/schemas.py":
+            SCHEMAS_SRC.replace("{MAYBE_B}", ", 'b': self.b"),
+        "src/repro/serve/server.py": """
+            class Handler:
+                def do_POST(self):
+                    path = self.path
+                    if path == "/v1/via_schema":
+                        req = Req.from_json(self._read())   # checks inside
+                    elif path == "/v1/via_helper":
+                        self.helper(self._read())
+                    elif path == "/v1/naked":
+                        self._send(self._read())            # RL004
+
+                def helper(self, d):
+                    check_protocol(d)
+        """,
+    })
+    assert rules_of(res) == ["RL004"]
+    assert "`/v1/naked`" in res.new[0].message
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline semantics
+# ---------------------------------------------------------------------------
+def test_inline_suppression(tmp_path):
+    files = {"src/repro/serve/eng.py": """
+        import threading
+
+        class Eng:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.pending = []    # guarded-by: _lock
+
+            def peek(self):
+                # post-join snapshot, documented single-threaded
+                return len(self.pending)  # repro-lint: disable=RL001 drained
+    """}
+    res = make_project(tmp_path, files)
+    assert res.new == [] and res.suppressed == 1
+
+    # a disable= for a DIFFERENT rule does not silence the finding
+    files["src/repro/serve/eng.py"] = files[
+        "src/repro/serve/eng.py"].replace("disable=RL001", "disable=RL002")
+    res = make_project(tmp_path, files)
+    assert rules_of(res) == ["RL001"] and res.suppressed == 0
+
+
+def test_baseline_grandfathers_but_catches_new(tmp_path):
+    src = {"src/repro/serve/eng.py": RL001_POSITIVE}
+    res = make_project(tmp_path, src)
+    assert len(res.new) == 2
+
+    base = tmp_path / "baseline.json"
+    baseline_mod.save(base, res.new)
+    res2 = run_lint(tmp_path, baseline_path=base)
+    assert res2.new == [] and len(res2.grandfathered) == 2
+    assert res2.exit_code == 0
+
+    # introduce a NEW violation: only it fails the run
+    (tmp_path / "src/repro/serve/eng.py").write_text(
+        textwrap.dedent(RL001_POSITIVE) + textwrap.dedent("""
+            def sneak(self):
+                return self.pending.pop()
+        """).replace("\n", "\n    ").rstrip() + "\n")
+    res3 = run_lint(tmp_path, baseline_path=base)
+    assert len(res3.grandfathered) == 2
+    assert [f.rule for f in res3.new] == ["RL001"]
+    assert "sneak" in res3.new[0].message
+    assert res3.exit_code == 1
+
+    # fixing everything leaves stale baseline entries, not failures
+    (tmp_path / "src/repro/serve/eng.py").write_text("x = 1\n")
+    res4 = run_lint(tmp_path, baseline_path=base)
+    assert res4.new == [] and len(res4.stale_baseline) == 2
+
+
+def test_fingerprint_survives_line_churn(tmp_path):
+    res = make_project(tmp_path, {"src/repro/serve/eng.py": RL001_POSITIVE})
+    fp = {f.fingerprint for f in res.new}
+    shifted = "\n\n# a comment\n" + textwrap.dedent(RL001_POSITIVE)
+    (tmp_path / "src/repro/serve/eng.py").write_text(shifted)
+    res2 = run_lint(tmp_path)
+    assert {f.fingerprint for f in res2.new} == fp
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+# ---------------------------------------------------------------------------
+def test_self_run_src_repro_is_clean():
+    """The committed tree must lint clean modulo the committed baseline —
+    the same gate CI runs."""
+    res = run_lint(REPO_ROOT,
+                   baseline_path=REPO_ROOT / "tools/analyze/baseline.json")
+    assert res.new == [], "\n".join(f.format_text() for f in res.new)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert cli_main(["--list-rules"]) == 0
+    assert cli_main(["--root", str(REPO_ROOT)]) == 0
+    out = capsys.readouterr()
+    assert "RL001" in out.out          # --list-rules table
+    # a dirty fixture tree exits 1 and renders GitHub annotations
+    p = tmp_path / "src/repro/serve/eng.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(textwrap.dedent(RL001_POSITIVE))
+    assert cli_main(["--root", str(tmp_path), "--format=github"]) == 1
+    out = capsys.readouterr()
+    assert "::error file=" in out.out

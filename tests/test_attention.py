@@ -33,7 +33,7 @@ def test_chunked_vs_ref(key, S, window, qb, kb):
     pos = jnp.arange(S, dtype=jnp.int32)
     out = chunked_attention(q, k, v, pos, pos, causal=True, window=window,
                             q_block=qb, kv_block=kb, q_per_kv=2)
-    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+    r = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                           v.transpose(0, 2, 1, 3), causal=True, window=window)
     np.testing.assert_allclose(out, r.transpose(0, 2, 1, 3), atol=2e-5)
 
@@ -44,7 +44,7 @@ def test_bidirectional(key):
     pos = jnp.arange(S, dtype=jnp.int32)
     out = chunked_attention(q, k, v, pos, pos, causal=False, window=None,
                             q_block=128, kv_block=128)
-    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+    r = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                           v.transpose(0, 2, 1, 3), causal=False)
     np.testing.assert_allclose(out, r.transpose(0, 2, 1, 3), atol=2e-5)
 
@@ -92,7 +92,7 @@ def test_swa_ring_equals_full_window(key):
     # the newest query, so no causal mask on the 1-token query)
     ctx_k = k_all[:, S - W + 1:].transpose(0, 2, 1, 3)
     ctx_v = v_all[:, S - W + 1:].transpose(0, 2, 1, 3)
-    r = ref.attention_ref(q.transpose(0, 2, 1, 3), ctx_k, ctx_v, causal=False)
+    r = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), ctx_k, ctx_v, causal=False)
     np.testing.assert_allclose(o_ring[:, 0], r[:, :, 0], atol=2e-5)
 
 

@@ -34,7 +34,7 @@ def test_flash_vs_ref(key, B, Hq, Hkv, S, hd, window, dtype):
     k = jax.random.normal(ks[1], (B, Hkv, S, hd)).astype(dtype)
     v = jax.random.normal(ks[2], (B, Hkv, S, hd)).astype(dtype)
     out = flash_attention(q, k, v, causal=True, window=window, bq=128, bk=128)
-    r = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+    r = ref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
                           v.astype(jnp.float32), causal=True, window=window)
     atol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(out.astype(jnp.float32), r, atol=atol)
@@ -47,7 +47,7 @@ def test_flash_bidirectional(key):
     k = jax.random.normal(ks[1], (B, H, S, hd))
     v = jax.random.normal(ks[2], (B, H, S, hd))
     out = flash_attention(q, k, v, causal=False)
-    r = ref.attention_ref(q, k, v, causal=False)
+    r = ref.flash_attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(out, r, atol=2e-5)
 
 

@@ -1,0 +1,1 @@
+"""Repo-local developer tooling (not shipped as part of the model stack)."""

@@ -1,0 +1,30 @@
+"""repro-lint: AST-based invariant analyzer for this repository.
+
+Four repo-specific rules, all built on the stdlib ``ast`` module (no
+third-party dependencies):
+
+* **RL001 lock discipline** -- fields annotated ``# guarded-by: _lock`` or
+  ``# guarded-by: engine-thread`` may only be touched under ``with
+  self._lock`` / in methods marked ``# repro-lint: engine-thread-only``
+  (or ``holds=_lock``).  Turns the prose contract in
+  ``serve/engine.py`` into a race detector.
+* **RL002 trace purity** -- module-level ``jax.jit`` functions (and the
+  same-module helpers they trace into) must not host-sync: no
+  ``.item()``/``.tolist()``, no ``float()/int()/bool()`` on tracers, no
+  ``np.*`` calls on traced values, no ``if``/``while`` on tracer values,
+  no mutation of containers that outlive the trace.
+* **RL003 kernel<->oracle pairing** -- every public kernel in
+  ``src/repro/kernels/`` needs a ``<name>_ref`` oracle in
+  ``kernels/ref.py`` and at least one test referencing both names.
+* **RL004 wire stability** -- the ``ApiError`` code->HTTP-status table is
+  frozen, every wire dataclass field must round-trip through
+  ``to_json``/``from_json``, and every POST ``/v1/*`` handler must check
+  ``protocol_version``.
+
+Run ``python -m tools.analyze --help`` (or the ``repro-lint`` console
+script) for usage; see the README "Static analysis" section for the
+annotation conventions.
+"""
+from .core import Finding, Project, SourceFile  # noqa: F401
+
+__all__ = ["Finding", "Project", "SourceFile"]

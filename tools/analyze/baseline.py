@@ -1,0 +1,55 @@
+"""Committed-baseline support: grandfather findings without hiding new ones.
+
+The baseline maps finding fingerprints (stable across line-number churn;
+see :class:`tools.analyze.core.Finding`) to a context record so humans
+can audit what was grandfathered.  ``repro-lint --write-baseline``
+regenerates it; findings absent from the baseline fail the run.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from .core import Finding
+
+BASELINE_VERSION = 1
+
+
+def load(path: Path) -> Dict[str, dict]:
+    if not path.is_file():
+        return {}
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}")
+    return dict(data.get("findings", {}))
+
+
+def save(path: Path, findings: List[Finding]) -> None:
+    body = {
+        "version": BASELINE_VERSION,
+        "findings": {
+            f.fingerprint: {
+                "rule": f.rule, "path": f.path,
+                "symbol": f.symbol, "message": f.message,
+            }
+            for f in sorted(findings, key=lambda x: (x.path, x.line, x.rule))
+        },
+    }
+    path.write_text(json.dumps(body, indent=2, sort_keys=True) + "\n")
+
+
+def split(findings: List[Finding], baseline: Dict[str, dict],
+          ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """(new, grandfathered, stale_baseline_fingerprints)."""
+    new: List[Finding] = []
+    old: List[Finding] = []
+    live = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            old.append(f)
+            live.add(f.fingerprint)
+        else:
+            new.append(f)
+    stale = [fp for fp in baseline if fp not in live]
+    return new, old, stale

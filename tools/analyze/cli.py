@@ -1,0 +1,142 @@
+"""Command-line front end for repro-lint (``python -m tools.analyze``)."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from . import baseline as baseline_mod
+from . import locks, pairing, purity, wire
+from .core import Finding, Project, apply_suppressions
+
+RULES = {
+    locks.RULE_ID: (locks.check, "lock discipline for guarded-by fields"),
+    purity.RULE_ID: (purity.check, "trace purity in module-level jit fns"),
+    pairing.RULE_ID: (pairing.check, "kernel <-> ref.py oracle pairing"),
+    wire.RULE_ID: (wire.check, "wire protocol stability (errors/schemas/handlers)"),
+}
+
+DEFAULT_BASELINE = "tools/analyze/baseline.json"
+
+
+@dataclasses.dataclass
+class LintResult:
+    new: List[Finding]
+    grandfathered: List[Finding]
+    stale_baseline: List[str]
+    suppressed: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.new else 0
+
+
+def run_lint(root: Path, *, select: Optional[Sequence[str]] = None,
+             baseline_path: Optional[Path] = None,
+             src_rel: str = "src/repro",
+             tests_rel: str = "tests") -> LintResult:
+    """Programmatic entry point (used by tests and the CLI)."""
+    project = Project(root, src_rel=src_rel, tests_rel=tests_rel)
+    findings: List[Finding] = list(project.parse_errors())
+    wanted = set(select) if select else set(RULES)
+    for rule_id, (check, _) in RULES.items():
+        if rule_id in wanted:
+            findings.extend(check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    findings, suppressed = apply_suppressions(project, findings)
+    base: Dict[str, dict] = {}
+    if baseline_path is not None:
+        base = baseline_mod.load(baseline_path)
+    new, old, stale = baseline_mod.split(findings, base)
+    return LintResult(new=new, grandfathered=old, stale_baseline=stale,
+                      suppressed=suppressed)
+
+
+def _emit(findings: List[Finding], fmt: str, out) -> None:
+    if fmt == "json":
+        print(json.dumps([f.to_dict() for f in findings], indent=2),
+              file=out)
+        return
+    for f in findings:
+        print(f.format_github() if fmt == "github" else f.format_text(),
+              file=out)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based invariant analyzer for this repo "
+                    "(RL001 locks, RL002 trace purity, RL003 kernel/oracle "
+                    "pairing, RL004 wire stability).")
+    ap.add_argument("--root", type=Path, default=Path("."),
+                    help="repository root (default: cwd)")
+    ap.add_argument("--src", default="src/repro",
+                    help="source subtree to analyze, relative to --root")
+    ap.add_argument("--tests", default="tests",
+                    help="test subtree (RL003 parity cross-check)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule IDs (default: all)")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         f"under --root, if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current findings to the baseline and exit 0")
+    ap.add_argument("--show-baselined", action="store_true",
+                    help="also print grandfathered findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, (_, desc) in sorted(RULES.items()):
+            print(f"{rule_id}  {desc}")
+        return 0
+
+    select = args.select.split(",") if args.select else None
+    root = args.root.resolve()
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline:
+        cand = root / DEFAULT_BASELINE
+        if cand.is_file():
+            baseline_path = cand
+    elif args.no_baseline:
+        baseline_path = None
+
+    try:
+        res = run_lint(root, select=select, baseline_path=baseline_path,
+                       src_rel=args.src, tests_rel=args.tests)
+    except (OSError, ValueError) as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        target = args.baseline or (root / DEFAULT_BASELINE)
+        baseline_mod.save(target, res.new + res.grandfathered)
+        print(f"repro-lint: wrote {len(res.new) + len(res.grandfathered)} "
+              f"finding(s) to {target}")
+        return 0
+
+    _emit(res.new, args.format, sys.stdout)
+    if args.show_baselined and res.grandfathered:
+        print(f"-- {len(res.grandfathered)} baselined finding(s):")
+        _emit(res.grandfathered, args.format, sys.stdout)
+    if res.stale_baseline:
+        print(f"repro-lint: note: {len(res.stale_baseline)} stale baseline "
+              f"entr{'y' if len(res.stale_baseline) == 1 else 'ies'} no "
+              f"longer fire(s); run --write-baseline to prune",
+              file=sys.stderr)
+    n_old = len(res.grandfathered)
+    summary = (f"repro-lint: {len(res.new)} new finding(s), "
+               f"{n_old} baselined, {res.suppressed} suppressed inline")
+    print(summary, file=sys.stderr)
+    return res.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

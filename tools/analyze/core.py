@@ -1,0 +1,253 @@
+"""Shared infrastructure for repro-lint: parsed files, findings, markers.
+
+Everything here is stdlib-only.  Comments are extracted with ``tokenize``
+(not regexes over raw lines) so ``#`` inside string literals can never be
+mistaken for an annotation.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+RULE_IDS = ("RL001", "RL002", "RL003", "RL004")
+
+# --- annotation grammar -----------------------------------------------------
+# field declaration:   self.pending = []          # guarded-by: _lock
+#                      self.slot_req = [...]      # guarded-by: engine-thread
+# method markers:      def step(self):            # repro-lint: engine-thread-only
+#                      def _sel(self):            # repro-lint: holds=_lock
+#                      def helper(...):           # repro-lint: traced
+# suppression:         <stmt>  # repro-lint: disable=RL001,RL004 <reason>
+_GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w-]*)")
+_LINT_RE = re.compile(r"#\s*repro-lint:\s*(.*)$")
+_DISABLE_RE = re.compile(r"disable=((?:RL\d{3})(?:\s*,\s*RL\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location.
+
+    ``symbol`` is a stable dotted anchor (``Class.method.field`` or similar)
+    used for baseline fingerprints so that line-number churn does not
+    invalidate a committed baseline.
+    """
+
+    rule: str
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        key = "|".join((self.rule, self.path, self.symbol, self.message))
+        return hashlib.sha1(key.encode("utf-8")).hexdigest()[:16]
+
+    def format_text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def format_github(self) -> str:
+        # GitHub annotation command; message must not contain newlines.
+        msg = f"{self.rule} {self.message}".replace("\n", " ")
+        return f"::error file={self.path},line={self.line}::{msg}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule, "path": self.path, "line": self.line,
+            "col": self.col, "message": self.message, "symbol": self.symbol,
+            "fingerprint": self.fingerprint,
+        }
+
+
+class SourceFile:
+    """A parsed python file plus its comment-derived annotations."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path                      # repo-relative posix path
+        self.text = text
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(text, filename=path)
+        except SyntaxError as e:              # surfaced as an RL000 finding
+            self.parse_error = e
+        self.comments: Dict[int, str] = {}    # line -> comment text (with '#')
+        self._standalone: Set[int] = set()    # lines that are comment-only
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        lines = self.text.splitlines()
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in toks:
+                if tok.type == tokenize.COMMENT:
+                    line = tok.start[0]
+                    self.comments[line] = tok.string
+                    src = lines[line - 1] if line <= len(lines) else ""
+                    if src.lstrip().startswith("#"):
+                        self._standalone.add(line)
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            pass  # parse_error already recorded; comments best-effort
+
+    # -- annotations --------------------------------------------------------
+    def guard_for_line(self, line: int) -> Optional[str]:
+        """``# guarded-by: X`` trailing comment on this line, if any."""
+        c = self.comments.get(line)
+        if not c:
+            return None
+        m = _GUARDED_BY_RE.search(c)
+        return m.group(1) if m else None
+
+    def markers_for_def(self, node: ast.AST) -> Set[str]:
+        """repro-lint markers on a ``def`` line or the line just above it.
+
+        Recognized markers: ``engine-thread-only``, ``holds=_lock``,
+        ``traced`` (space-separated on one comment).
+        """
+        out: Set[str] = set()
+        lineno = getattr(node, "lineno", None)
+        if lineno is None:
+            return out
+        candidates = [lineno]
+        above = lineno - 1
+        if above in self._standalone:
+            candidates.append(above)
+        for ln in candidates:
+            c = self.comments.get(ln)
+            if not c:
+                continue
+            m = _LINT_RE.search(c)
+            if not m:
+                continue
+            for tok in m.group(1).split():
+                if tok in ("engine-thread-only", "holds=_lock", "traced"):
+                    out.add(tok)
+        return out
+
+    def suppressions(self) -> Dict[int, Set[str]]:
+        """Map of source line -> rule IDs suppressed on that line.
+
+        A trailing ``# repro-lint: disable=RLxxx <reason>`` suppresses
+        findings on its own line; a standalone comment suppresses the
+        next non-comment line (so a multi-line reason still anchors to
+        the statement below it).
+        """
+        out: Dict[int, Set[str]] = {}
+        n_lines = self.text.count("\n") + 1
+        for line, c in self.comments.items():
+            m = _LINT_RE.search(c)
+            if not m:
+                continue
+            d = _DISABLE_RE.search(m.group(1))
+            if not d:
+                continue
+            rules = {r.strip() for r in d.group(1).split(",")}
+            out.setdefault(line, set()).update(rules)
+            if line in self._standalone:
+                nxt = line + 1
+                while nxt in self._standalone and nxt <= n_lines:
+                    nxt += 1
+                out.setdefault(nxt, set()).update(rules)
+        return out
+
+
+class Project:
+    """The analyzed tree: ``src/repro`` sources plus the test corpus.
+
+    ``root`` is the repository root.  Fixture projects in tests may use any
+    directory that mimics the ``src/repro`` + ``tests`` layout (both
+    subtrees are optional; rules degrade gracefully when one is absent).
+    """
+
+    def __init__(self, root: Path, src_rel: str = "src/repro",
+                 tests_rel: str = "tests"):
+        self.root = Path(root)
+        self.src_rel = src_rel
+        self.tests_rel = tests_rel
+        self.files: List[SourceFile] = []
+        src_dir = self.root / src_rel
+        if src_dir.is_dir():
+            for p in sorted(src_dir.rglob("*.py")):
+                rel = p.relative_to(self.root).as_posix()
+                self.files.append(SourceFile(rel, p.read_text()))
+        self.tests: List[Tuple[str, str]] = []   # (rel path, text)
+        tests_dir = self.root / tests_rel
+        if tests_dir.is_dir():
+            for p in sorted(tests_dir.rglob("*.py")):
+                rel = p.relative_to(self.root).as_posix()
+                self.tests.append((rel, p.read_text()))
+        self._by_path = {f.path: f for f in self.files}
+
+    def file(self, path: str) -> Optional[SourceFile]:
+        return self._by_path.get(path)
+
+    def find_suffix(self, suffix: str) -> Optional[SourceFile]:
+        """First source file whose path ends with ``suffix`` (posix)."""
+        for f in self.files:
+            if f.path.endswith(suffix):
+                return f
+        return None
+
+    def parse_errors(self) -> List[Finding]:
+        out = []
+        for f in self.files:
+            if f.parse_error is not None:
+                out.append(Finding(
+                    rule="RL000", path=f.path,
+                    line=f.parse_error.lineno or 1,
+                    col=(f.parse_error.offset or 1) - 1,
+                    message=f"syntax error: {f.parse_error.msg}",
+                    symbol="<parse>"))
+        return out
+
+
+def apply_suppressions(project: Project,
+                       findings: List[Finding]) -> Tuple[List[Finding], int]:
+    """Drop findings covered by inline ``disable=`` comments.
+
+    Returns (kept, suppressed_count).
+    """
+    cache: Dict[str, Dict[int, Set[str]]] = {}
+    kept: List[Finding] = []
+    dropped = 0
+    for f in findings:
+        sf = project.file(f.path)
+        if sf is None:
+            kept.append(f)
+            continue
+        if f.path not in cache:
+            cache[f.path] = sf.suppressions()
+        rules = cache[f.path].get(f.line, set())
+        if f.rule in rules:
+            dropped += 1
+        else:
+            kept.append(f)
+    return kept, dropped
+
+
+def attr_root(node: ast.AST) -> Optional[str]:
+    """Root ``Name`` of a dotted attribute chain (``np.linalg.norm`` -> np)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` attribute/name chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

@@ -1,0 +1,232 @@
+"""RL001: lock discipline for annotated engine/pool/index fields.
+
+A field declared in ``__init__`` with a trailing ``# guarded-by: _lock``
+comment may only be read or written:
+
+* lexically inside a ``with self._lock:`` block, or
+* in a method carrying ``# repro-lint: holds=_lock`` (the caller owns the
+  lock), or
+* in a method carrying ``# repro-lint: engine-thread-only`` (only the
+  single thread driving ``step()`` ever runs it).
+
+A field declared ``# guarded-by: engine-thread`` is single-thread state:
+it may only be touched in ``engine-thread-only`` methods.  ``__init__``
+is always exempt (the object is not yet shared).
+
+Accesses to a guarded field name through anything other than ``self`` in
+its declaring class ("foreign" accesses, e.g. ``eng.pending`` from an
+HTTP handler) are flagged everywhere in the scanned tree, unless the
+enclosing class declares a field of the same name itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Finding, Project, SourceFile
+
+RULE_ID = "RL001"
+
+GUARD_LOCK = "_lock"
+GUARD_THREAD = "engine-thread"
+
+
+class _ClassInfo:
+    def __init__(self, file: SourceFile, node: ast.ClassDef):
+        self.file = file
+        self.node = node
+        self.name = node.name
+        self.guarded: Dict[str, str] = {}      # field -> guard kind
+        self.own_fields: Set[str] = set()      # every self.X ever assigned
+        self._collect()
+
+    def _collect(self) -> None:
+        for item in self.node.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for sub in ast.walk(item):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        for field in _self_fields(t):
+                            self.own_fields.add(field)
+                            if item.name != "__init__":
+                                continue
+                            # the annotation may sit on any line of a
+                            # multi-line declaration
+                            end = getattr(sub, "end_lineno", sub.lineno)
+                            for ln in range(sub.lineno, (end or sub.lineno) + 1):
+                                guard = self.file.guard_for_line(ln)
+                                if guard:
+                                    self.guarded[field] = guard
+                                    break
+
+
+def _self_fields(target: ast.AST) -> List[str]:
+    """Field names from an assignment target rooted at ``self``."""
+    out: List[str] = []
+    if isinstance(target, ast.Attribute) and \
+            isinstance(target.value, ast.Name) and target.value.id == "self":
+        out.append(target.attr)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            out.extend(_self_fields(elt))
+    return out
+
+
+def _is_self_lock(expr: ast.AST) -> bool:
+    """``self._lock`` (the guard object) as a with-item context."""
+    return (isinstance(expr, ast.Attribute) and expr.attr == "_lock"
+            and isinstance(expr.value, ast.Name) and expr.value.id == "self")
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walk one method; report guarded self.X accesses outside the lock."""
+
+    def __init__(self, cls: _ClassInfo, method: ast.FunctionDef,
+                 markers: Set[str], findings: List[Finding]):
+        self.cls = cls
+        self.method = method
+        self.markers = markers
+        self.findings = findings
+        self.lock_depth = 0
+        # A nested def/lambda runs later, possibly without the lock: being
+        # lexically inside the with-block proves nothing, so the guard
+        # context resets at function boundaries.
+        self.fn_depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        takes_lock = any(_is_self_lock(item.context_expr)
+                         for item in node.items)
+        if takes_lock:
+            self.lock_depth += 1
+            self.generic_visit(node)
+            self.lock_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def _enter_fn(self, node: ast.AST) -> None:
+        self.fn_depth += 1
+        saved = self.lock_depth
+        self.lock_depth = 0
+        self.generic_visit(node)
+        self.lock_depth = saved
+        self.fn_depth -= 1
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._enter_fn(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._enter_fn(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._enter_fn(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if isinstance(node.value, ast.Name) and node.value.id == "self" \
+                and node.attr in self.cls.guarded:
+            guard = self.cls.guarded[node.attr]
+            if not self._access_ok(guard):
+                kind = ("outside `with self._lock`" if guard == GUARD_LOCK
+                        else "outside the engine thread")
+                self.findings.append(Finding(
+                    rule=RULE_ID, path=self.cls.file.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"`self.{node.attr}` (guarded-by: {guard}) "
+                             f"accessed {kind} in "
+                             f"`{self.cls.name}.{self.method.name}`"),
+                    symbol=f"{self.cls.name}.{self.method.name}.{node.attr}"))
+        self.generic_visit(node)
+
+    def _access_ok(self, guard: str) -> bool:
+        if self.method.name == "__init__":
+            return True
+        if guard == GUARD_LOCK:
+            return (self.lock_depth > 0
+                    or "holds=_lock" in self.markers
+                    or "engine-thread-only" in self.markers)
+        if guard == GUARD_THREAD:
+            return "engine-thread-only" in self.markers
+        return True  # unknown guard kinds are declarations-only
+
+
+class _ForeignChecker(ast.NodeVisitor):
+    """Flag ``anything_but_self.<guarded-field>`` across the whole tree."""
+
+    def __init__(self, file: SourceFile, registry: Dict[str, List[str]],
+                 findings: List[Finding]):
+        self.file = file
+        self.registry = registry
+        self.findings = findings
+        self.class_stack: List[_ClassInfo] = []
+        self.fn_stack: List[str] = []
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(_ClassInfo(self.file, node))
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def _visit_fn(self, node) -> None:
+        self.fn_stack.append(node.name)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        field = node.attr
+        owners = self.registry.get(field)
+        if owners:
+            base_is_self = (isinstance(node.value, ast.Name)
+                            and node.value.id == "self")
+            cls = self.class_stack[-1] if self.class_stack else None
+            if base_is_self:
+                pass  # declaring/owning classes handled by _MethodChecker
+            elif cls is not None and field in cls.own_fields \
+                    and cls.name not in owners:
+                pass  # same-named private field of an unrelated class
+            else:
+                where = ".".join(self.fn_stack) or "<module>"
+                scope = f"{cls.name}.{where}" if cls else where
+                self.findings.append(Finding(
+                    rule=RULE_ID, path=self.file.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"foreign access to `{field}` (guarded field of "
+                             f"{'/'.join(owners)}) from `{scope}`; go through "
+                             f"a locked accessor instead"),
+                    symbol=f"{scope}.{field}"))
+        self.generic_visit(node)
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    classes: List[_ClassInfo] = []
+    for f in project.files:
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ClassDef):
+                info = _ClassInfo(f, node)
+                if info.guarded:
+                    classes.append(info)
+
+    # pass 1: in-class discipline
+    for cls in classes:
+        for item in cls.node.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            markers = cls.file.markers_for_def(item)
+            _MethodChecker(cls, item, markers, findings).visit(item)
+
+    # pass 2: foreign accesses anywhere in the scanned tree
+    registry: Dict[str, List[str]] = {}
+    for cls in classes:
+        for field in cls.guarded:
+            registry.setdefault(field, []).append(cls.name)
+    if registry:
+        for f in project.files:
+            if f.tree is not None:
+                _ForeignChecker(f, registry, findings).visit(f.tree)
+    return findings

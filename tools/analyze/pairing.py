@@ -1,0 +1,71 @@
+"""RL003: every public Pallas kernel pairs with a ``*_ref`` oracle.
+
+For each public top-level function in ``src/repro/kernels/*.py``
+(excluding ``ref.py`` and ``__init__.py``):
+
+* ``kernels/ref.py`` must define ``<kernel>_ref`` -- the pure-jnp oracle
+  the kernel is validated against, and
+* at least one file under ``tests/`` must reference both names (the
+  parity test that actually exercises the pair).
+
+Extra helpers in ``ref.py`` that don't correspond to a kernel (shared
+sub-oracles like ``ssd_ref``) are allowed.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set
+
+from .core import Finding, Project
+
+RULE_ID = "RL003"
+
+
+def _public_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")]
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    kernels: Dict[str, tuple] = {}      # name -> (path, lineno), first wins
+    ref_names: Set[str] = set()
+    kernels_dir_seen = False
+    for f in project.files:
+        if f.tree is None or "/kernels/" not in f.path:
+            continue
+        kernels_dir_seen = True
+        base = f.path.rsplit("/", 1)[-1]
+        if base == "__init__.py":
+            continue
+        if base == "ref.py":
+            ref_names = {n.name for n in _public_defs(f.tree)}
+            continue
+        for fn in _public_defs(f.tree):
+            kernels.setdefault(fn.name, (f.path, fn.lineno))
+    if not kernels_dir_seen:
+        return findings
+
+    for name, (path, lineno) in sorted(kernels.items()):
+        oracle = f"{name}_ref"
+        if oracle not in ref_names:
+            findings.append(Finding(
+                rule=RULE_ID, path=path, line=lineno, col=0,
+                message=(f"public kernel `{name}` has no `{oracle}` oracle "
+                         f"in kernels/ref.py"),
+                symbol=f"kernels.{name}.oracle"))
+            continue  # without the oracle, the test check is moot
+        pair_re = None
+        for test_path, text in project.tests:
+            if re.search(rf"\b{re.escape(name)}\b", text) and \
+                    re.search(rf"\b{re.escape(oracle)}\b", text):
+                pair_re = test_path
+                break
+        if pair_re is None and project.tests:
+            findings.append(Finding(
+                rule=RULE_ID, path=path, line=lineno, col=0,
+                message=(f"no test references both `{name}` and `{oracle}` "
+                         f"(parity test missing)"),
+                symbol=f"kernels.{name}.parity-test"))
+    return findings

@@ -1,0 +1,480 @@
+"""RL002: trace purity inside module-level jitted functions.
+
+Entry points are module-level ``def``s decorated with ``jax.jit`` /
+``functools.partial(jax.jit, ...)`` (plus any function opted in with a
+``# repro-lint: traced`` marker).  The traced set is closed over direct
+calls to same-module top-level helpers; static args declared via
+``static_argnames`` are propagated call-site by call-site, so an ``if``
+on ``cfg.age_encoding`` is recognized as trace-time control flow while an
+``if`` on a tracer value is flagged.
+
+Flagged inside traced code:
+
+* ``.item()`` / ``.tolist()`` / ``.to_py()`` / ``.block_until_ready()``
+  and ``jax.device_get`` -- explicit device->host syncs;
+* ``float()/int()/bool()/complex()`` applied to a non-static value --
+  implicit host sync on a tracer;
+* ``np.*`` calls with a non-static argument -- silent host
+  materialization (``np.inf`` and numpy math on static python values are
+  fine);
+* ``if``/``while``/``assert``/ternary/comprehension conditions that are
+  not provably trace-static (static = literals, static params and
+  attribute chains on them, ``.shape``/``.ndim``/``.dtype``, ``is
+  None`` tests, and arithmetic over those);
+* mutating a container that outlives the trace body (``append`` etc. on
+  a closure/global name, or through an attribute chain);
+* ``global``/``nonlocal`` declarations.
+
+This mechanically enforces the "exactly one device->host sync per tick"
+property: the only sanctioned sync is the engine's ``_fetch``, which
+lives outside the jitted functions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, Project, SourceFile, attr_root, dotted_name
+
+RULE_ID = "RL002"
+
+_SYNC_METHODS = {"item", "tolist", "to_py", "block_until_ready"}
+_CAST_BUILTINS = {"float", "int", "bool", "complex"}
+_MUTATORS = {"append", "extend", "insert", "remove", "clear", "pop",
+             "popitem", "update", "setdefault", "add", "discard"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"min", "max", "len", "abs", "round", "sorted", "tuple",
+                 "list", "sum", "range", "isinstance", "getattr", "hasattr",
+                 "divmod", "zip", "enumerate"}
+
+
+def _jit_decoration(dec: ast.AST) -> Optional[Tuple[bool, Set[str]]]:
+    """(is_jit, static_argnames) if this decorator applies jax.jit."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = dotted_name(target)
+    if name in ("jax.jit", "jit"):
+        return True, set()
+    # functools.partial(jax.jit, static_argnames=(...), ...)
+    if isinstance(dec, ast.Call) and name in ("functools.partial", "partial"):
+        if dec.args and dotted_name(dec.args[0]) in ("jax.jit", "jit"):
+            static: Set[str] = set()
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    static |= _str_elts(kw.value)
+            return True, static
+    return None
+
+
+def _str_elts(node: ast.AST) -> Set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+        return out
+    return set()
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _assigned_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names bound in ``fn``'s own scope (excluding nested function bodies)."""
+    out: Set[str] = set(_param_names(fn))
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out.add(child.name)
+                continue
+            if isinstance(child, ast.Name) and \
+                    isinstance(child.ctx, (ast.Store, ast.Del)):
+                out.add(child.id)
+            if isinstance(child, ast.comprehension):
+                for t in ast.walk(child.target):
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+            walk(child)
+
+    walk(fn)
+    return out
+
+
+class _Scope:
+    def __init__(self, fn: ast.FunctionDef, static: Set[str],
+                 parent: Optional["_Scope"]):
+        self.fn = fn
+        self.locals = _assigned_names(fn)
+        self.static = set(static)
+        self.parent = parent
+
+    def is_local(self, name: str) -> bool:
+        return name in self.locals
+
+    def lookup_static(self, name: str) -> bool:
+        """True if ``name`` resolves to a trace-static value."""
+        if name in self.locals:
+            return name in self.static
+        if self.parent is not None:
+            return self.parent.lookup_static(name)
+        # Module globals (imports, constants, other functions) are fixed at
+        # trace time.
+        return True
+
+
+class _FnAnalyzer:
+    """Analyze one traced function; record violations and outgoing calls."""
+
+    def __init__(self, module: "_ModuleCtx", fn: ast.FunctionDef,
+                 static_params: Set[str], entry: str):
+        self.m = module
+        self.fn = fn
+        self.entry = entry
+        self.scope = _Scope(fn, static_params & set(_param_names(fn)), None)
+        # calls into same-module top-level functions: name -> static params
+        self.calls: Dict[str, Set[str]] = {}
+
+    # -- static-expression classification -----------------------------------
+    def is_static(self, node: ast.AST, scope: _Scope) -> bool:
+        if node is None:
+            return True
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            return scope.lookup_static(node.id)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True     # .shape/.ndim/.dtype are trace-time values
+            return self.is_static(node.value, scope)
+        if isinstance(node, ast.Subscript):
+            return (self.is_static(node.value, scope)
+                    and self.is_static(node.slice, scope))
+        if isinstance(node, ast.Slice):
+            return all(self.is_static(p, scope)
+                       for p in (node.lower, node.upper, node.step))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return all(self.is_static(e, scope) for e in node.elts)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is resolved at trace time even
+            # when x is a tracer (tracers are never None).
+            if len(node.ops) == 1 and \
+                    isinstance(node.ops[0], (ast.Is, ast.IsNot)) and \
+                    isinstance(node.comparators[0], ast.Constant) and \
+                    node.comparators[0].value is None:
+                return True
+            return (self.is_static(node.left, scope)
+                    and all(self.is_static(c, scope)
+                            for c in node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v, scope) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand, scope)
+        if isinstance(node, ast.BinOp):
+            return (self.is_static(node.left, scope)
+                    and self.is_static(node.right, scope))
+        if isinstance(node, ast.IfExp):
+            return all(self.is_static(p, scope)
+                       for p in (node.test, node.body, node.orelse))
+        if isinstance(node, ast.Call):
+            args_static = (all(self.is_static(a, scope) for a in node.args)
+                           and all(self.is_static(kw.value, scope)
+                                   for kw in node.keywords))
+            if isinstance(node.func, ast.Name):
+                if node.func.id in _STATIC_CALLS | _CAST_BUILTINS:
+                    return args_static
+                return False
+            if isinstance(node.func, ast.Attribute):
+                # method on a static receiver, e.g. (V - 1).bit_length()
+                return args_static and self.is_static(node.func.value, scope)
+            return False
+        if isinstance(node, ast.JoinedStr):
+            return True
+        return False
+
+    # -- driver --------------------------------------------------------------
+    def run(self) -> None:
+        self._visit_body(self.fn.body, self.scope)
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.m.findings.append(Finding(
+            rule=RULE_ID, path=self.m.file.path,
+            line=node.lineno, col=node.col_offset,
+            message=(f"{what} inside traced function "
+                     f"`{self.fn.name}` (jit entry `{self.entry}`)"),
+            symbol=f"{self.fn.name}.{what}"))
+
+    def _visit_body(self, body: Sequence[ast.stmt], scope: _Scope) -> None:
+        for stmt in body:
+            self._visit_stmt(stmt, scope)
+
+    def _visit_stmt(self, stmt: ast.stmt, scope: _Scope) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._scan_expr(value, scope)
+                static = self.is_static(value, scope)
+                if isinstance(stmt, ast.AugAssign):
+                    static = static and self.is_static(stmt.target, scope)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for t in targets:
+                    self._bind(t, static, scope)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, scope)
+            if not self.is_static(stmt.test, scope):
+                self._flag(stmt.test, "`if` on a traced value")
+            self._visit_body(stmt.body, scope)
+            self._visit_body(stmt.orelse, scope)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, scope)
+            if not self.is_static(stmt.test, scope):
+                self._flag(stmt.test, "`while` on a traced value")
+            self._visit_body(stmt.body, scope)
+            self._visit_body(stmt.orelse, scope)
+        elif isinstance(stmt, ast.For):
+            self._scan_expr(stmt.iter, scope)
+            if not self.is_static(stmt.iter, scope) and \
+                    not _dict_style_iter(stmt.iter, stmt.target, stmt):
+                self._flag(stmt.iter, "python `for` over a traced value")
+            self._bind(stmt.target, True, scope)
+            self._visit_body(stmt.body, scope)
+            self._visit_body(stmt.orelse, scope)
+        elif isinstance(stmt, ast.Assert):
+            self._scan_expr(stmt.test, scope)
+            if not self.is_static(stmt.test, scope):
+                self._flag(stmt.test, "`assert` on a traced value")
+        elif isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            self._flag(stmt, f"`{'global' if isinstance(stmt, ast.Global) else 'nonlocal'}` rebinding")
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, scope)
+            self._visit_body(stmt.body, scope)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = _Scope(stmt, set(), scope)
+            self._visit_body(stmt.body, inner)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value, scope)
+        elif isinstance(stmt, ast.Expr):
+            self._scan_expr(stmt.value, scope)
+        elif isinstance(stmt, (ast.Try,)):
+            self._visit_body(stmt.body, scope)
+            for h in stmt.handlers:
+                self._visit_body(h.body, scope)
+            self._visit_body(stmt.orelse, scope)
+            self._visit_body(stmt.finalbody, scope)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self._scan_expr(stmt.exc, scope)
+        elif isinstance(stmt, (ast.Import, ast.ImportFrom, ast.Pass,
+                               ast.Break, ast.Continue, ast.Delete)):
+            pass
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._scan_expr(child, scope)
+
+    def _bind(self, target: ast.AST, static: bool, scope: _Scope) -> None:
+        if isinstance(target, ast.Name):
+            if static:
+                scope.static.add(target.id)
+            else:
+                scope.static.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, static, scope)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, static, scope)
+        # attribute/subscript stores don't bind names
+
+    # -- expression scan -----------------------------------------------------
+    def _scan_expr(self, node: ast.AST, scope: _Scope) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.IfExp):
+                if not self.is_static(sub.test, scope):
+                    self._flag(sub.test, "ternary on a traced value")
+            elif isinstance(sub, ast.comprehension):
+                if not self.is_static(sub.iter, scope) and \
+                        not _dict_style_iter(sub.iter, sub.target, node):
+                    self._flag(sub.iter, "comprehension over a traced value")
+                for cond in sub.ifs:
+                    if not self.is_static(cond, scope):
+                        self._flag(cond, "comprehension `if` on a traced value")
+            elif isinstance(sub, ast.Call):
+                self._scan_call(sub, scope)
+
+    def _scan_call(self, call: ast.Call, scope: _Scope) -> None:
+        func = call.func
+        args_static = (all(self.is_static(a, scope) for a in call.args)
+                       and all(self.is_static(kw.value, scope)
+                               for kw in call.keywords))
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_METHODS:
+                self._flag(call, f"host sync `.{func.attr}()`")
+                return
+            root = attr_root(func)
+            if root in self.m.np_aliases and not args_static:
+                self._flag(call, f"`{dotted_name(func)}` call on a traced value")
+                return
+            if dotted_name(func) in ("jax.device_get",):
+                self._flag(call, "host sync `jax.device_get`")
+                return
+            if func.attr in _MUTATORS:
+                self._scan_mutation(call, func, scope)
+        elif isinstance(func, ast.Name):
+            if func.id in _CAST_BUILTINS and not args_static:
+                self._flag(call, f"host cast `{func.id}()` on a traced value")
+            elif func.id == "print":
+                self._flag(call, "`print` side effect")
+            elif func.id in self.m.functions:
+                # same-module helper: propagate static params transitively
+                callee = self.m.functions[func.id]
+                bound = _bind_call_static(self, callee, call, scope)
+                prev = self.calls.get(func.id)
+                self.calls[func.id] = (bound if prev is None
+                                       else prev & bound)
+
+    def _scan_mutation(self, call: ast.Call, func: ast.Attribute,
+                       scope: _Scope) -> None:
+        recv = func.value
+        if isinstance(recv, ast.Name):
+            # mutating a local container is trace-time metaprogramming;
+            # mutating a closure/global container escapes the trace body
+            if not scope.is_local(recv.id):
+                self._flag(call, f"mutation `.{func.attr}()` of "
+                                 f"non-local container `{recv.id}`")
+        elif isinstance(recv, ast.Attribute):
+            self._flag(call, f"mutation `.{func.attr}()` through attribute "
+                             f"`{dotted_name(recv) or recv.attr}`")
+
+
+def _dict_style_iter(iter_node: ast.AST, target: ast.AST,
+                     context: ast.AST) -> bool:
+    """Iterating a pytree dict by key (``{... for k in state}`` with
+    ``state[k]`` in the body) is trace-static structure iteration, not a
+    host sync -- the keys are python strings even when the values are
+    tracers."""
+    if isinstance(iter_node, ast.Call) and \
+            isinstance(iter_node.func, ast.Attribute) and \
+            iter_node.func.attr in ("keys", "items") and not iter_node.args:
+        container = iter_node.func.value
+    else:
+        container = iter_node
+    if not isinstance(container, ast.Name):
+        return False
+    targets = {t.id for t in ast.walk(target) if isinstance(t, ast.Name)}
+    for sub in ast.walk(context):
+        if isinstance(sub, ast.Subscript) and \
+                isinstance(sub.value, ast.Name) and \
+                sub.value.id == container.id:
+            for n in ast.walk(sub.slice):
+                if isinstance(n, ast.Name) and n.id in targets:
+                    return True
+    return False
+
+
+def _bind_call_static(an: _FnAnalyzer, callee: ast.FunctionDef,
+                      call: ast.Call, scope: _Scope) -> Set[str]:
+    """Callee params that receive trace-static expressions at this site."""
+    a = callee.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    static: Set[str] = set()
+    for i, arg in enumerate(call.args):
+        if i < len(pos) and an.is_static(arg, scope):
+            static.add(pos[i])
+    kwonly = {p.arg for p in a.kwonlyargs}
+    for kw in call.keywords:
+        if kw.arg and (kw.arg in kwonly or kw.arg in pos) \
+                and an.is_static(kw.value, scope):
+            static.add(kw.arg)
+    return static
+
+
+class _ModuleCtx:
+    def __init__(self, file: SourceFile):
+        self.file = file
+        self.findings: List[Finding] = []
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        self.np_aliases: Set[str] = set()
+        assert file.tree is not None
+        for node in file.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "numpy":
+                        self.np_aliases.add(alias.asname or "numpy")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "numpy":
+                    for alias in node.names:
+                        self.np_aliases.add(alias.asname or alias.name)
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in project.files:
+        if f.tree is None:
+            continue
+        m = _ModuleCtx(f)
+        # seed: decorated jit entries + explicitly marked traced functions
+        worklist: List[str] = []
+        static_of: Dict[str, Set[str]] = {}
+        entry_of: Dict[str, str] = {}
+        for name, fn in m.functions.items():
+            jit_static: Optional[Set[str]] = None
+            for dec in fn.decorator_list:
+                hit = _jit_decoration(dec)
+                if hit:
+                    jit_static = (jit_static or set()) | hit[1]
+            if jit_static is None and "traced" in f.markers_for_def(fn):
+                jit_static = set()
+            if jit_static is not None:
+                static_of[name] = jit_static
+                entry_of[name] = name
+                worklist.append(name)
+        if not worklist:
+            continue
+        # transitive closure over same-module helpers, propagating which
+        # params are static; re-analyze if a static set shrinks
+        analyzed: Dict[str, Set[str]] = {}
+        guard = 0
+        while worklist and guard < 1000:
+            guard += 1
+            name = worklist.pop(0)
+            fn = m.functions[name]
+            static = static_of.get(name, set())
+            if analyzed.get(name) == static:
+                continue
+            analyzed[name] = set(static)
+            an = _FnAnalyzer(m, fn, static, entry_of.get(name, name))
+            an.run()
+            for callee, bound in an.calls.items():
+                prev = static_of.get(callee)
+                merged = bound if prev is None else prev & bound
+                if callee not in entry_of:
+                    entry_of[callee] = entry_of.get(name, name)
+                if prev is None or merged != prev or callee not in analyzed:
+                    static_of[callee] = merged
+                    worklist.append(callee)
+        # keep only findings from the final fixpoint pass of each function:
+        # re-run once cleanly to avoid duplicates from re-analysis
+        m_final = _ModuleCtx(f)
+        m_final.np_aliases = m.np_aliases
+        for name, static in analyzed.items():
+            final_static = static_of.get(name, static)
+            an = _FnAnalyzer(m_final, m.functions[name], final_static,
+                             entry_of.get(name, name))
+            an.run()
+        findings.extend(m_final.findings)
+    return findings

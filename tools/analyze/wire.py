@@ -1,0 +1,322 @@
+"""RL004: wire stability -- error taxonomy, schema round-trips, handshakes.
+
+Three sub-checks over the versioned JSON protocol:
+
+(a) **Frozen error table** -- every ``ApiError`` subclass in
+    ``api/errors.py`` must carry a literal ``code`` that is unique and
+    maps onto exactly the HTTP status recorded in :data:`FROZEN_WIRE_V1`.
+    Adding a wire code is a deliberate protocol change: extend the table
+    here in the same commit (that's the point -- the analyzer makes the
+    diff reviewable instead of silent).
+
+(b) **Schema round-trips** -- every field of a wire dataclass in
+    ``api/schemas.py`` (a ``@dataclass`` that defines ``to_json`` /
+    ``from_json``) must appear in both methods, so nothing silently
+    drops on one side of the wire.
+
+(c) **Protocol handshake** -- every ``path == "/v1/..."`` branch in
+    ``serve/server.py``'s ``do_POST`` must (transitively) call
+    ``check_protocol`` or parse the body through a schema whose
+    ``from_json`` does.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Finding, Project, SourceFile, dotted_name
+
+RULE_ID = "RL004"
+
+# The protocol-v1 error table. Frozen: drift between this and
+# api/errors.py is an RL004 finding in either direction.
+FROZEN_WIRE_V1: Dict[str, int] = {
+    "empty_trajectory": 400,
+    "too_long": 400,
+    "ages_required": 400,
+    "ages_length_mismatch": 400,
+    "rng_not_serializable": 400,
+    "unsupported_override": 400,
+    "invalid_request": 400,
+    "protocol_version_mismatch": 409,
+    "unknown_endpoint": 404,
+    "timeout": 504,
+    "request_cancelled": 409,
+    "internal": 500,
+}
+
+_ERRORS_SUFFIX = "api/errors.py"
+_SCHEMAS_SUFFIX = "api/schemas.py"
+_SERVER_SUFFIX = "serve/server.py"
+
+
+# --------------------------------------------------------------------------
+# (a) error taxonomy
+# --------------------------------------------------------------------------
+def _class_attr(node: ast.ClassDef, name: str):
+    """(value_node, lineno) of a class-level ``name = ...`` / AnnAssign."""
+    for item in node.body:
+        if isinstance(item, ast.Assign):
+            for t in item.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return item.value, item.lineno
+        elif isinstance(item, ast.AnnAssign) and \
+                isinstance(item.target, ast.Name) and \
+                item.target.id == name and item.value is not None:
+            return item.value, item.lineno
+    return None, None
+
+
+def _check_errors(f: SourceFile, findings: List[Finding]) -> None:
+    classes = {n.name: n for n in f.tree.body if isinstance(n, ast.ClassDef)}
+
+    def reaches_api_error(cls: ast.ClassDef, seen: Set[str]) -> bool:
+        for b in cls.bases:
+            bname = dotted_name(b)
+            if bname == "ApiError":
+                return True
+            if bname in classes and bname not in seen:
+                seen.add(bname)
+                if reaches_api_error(classes[bname], seen):
+                    return True
+        return False
+
+    def resolved(cls: ast.ClassDef, attr: str):
+        """Walk the in-file MRO for a literal class attribute."""
+        cur: Optional[ast.ClassDef] = cls
+        while cur is not None:
+            val, line = _class_attr(cur, attr)
+            if val is not None:
+                return val, line, cur.name
+            nxt = None
+            for b in cur.bases:
+                bname = dotted_name(b)
+                if bname in classes:
+                    nxt = classes[bname]
+                    break
+            cur = nxt
+        return None, None, None
+
+    seen_codes: Dict[str, str] = {}   # code -> class name
+    live: Dict[str, Tuple[int, str, int]] = {}  # code -> (status, cls, line)
+    for name, cls in classes.items():
+        if name == "ApiError" or not reaches_api_error(cls, set()):
+            continue
+        code_val, code_line, _ = resolved(cls, "code")
+        status_val, _, _ = resolved(cls, "http_status")
+        anchor = code_line or cls.lineno
+        if not (isinstance(code_val, ast.Constant)
+                and isinstance(code_val.value, str)):
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=anchor, col=0,
+                message=f"`{name}.code` is not a string literal; wire codes "
+                        f"must be statically auditable",
+                symbol=f"errors.{name}.code"))
+            continue
+        code = code_val.value
+        if not (isinstance(status_val, ast.Constant)
+                and isinstance(status_val.value, int)):
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=anchor, col=0,
+                message=f"`{name}.http_status` is not an int literal",
+                symbol=f"errors.{name}.http_status"))
+            continue
+        status = status_val.value
+        if code in seen_codes:
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=anchor, col=0,
+                message=(f"wire code `{code}` registered by both "
+                         f"`{seen_codes[code]}` and `{name}`; the registry "
+                         f"must be 1:1"),
+                symbol=f"errors.{name}.duplicate"))
+            continue
+        seen_codes[code] = name
+        live[code] = (status, name, anchor)
+
+    for code, (status, name, anchor) in sorted(live.items()):
+        if code not in FROZEN_WIRE_V1:
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=anchor, col=0,
+                message=(f"new wire code `{code}` ({name}) not in the frozen "
+                         f"v1 table; extend FROZEN_WIRE_V1 in "
+                         f"tools/analyze/wire.py deliberately"),
+                symbol=f"errors.{name}.unfrozen"))
+        elif FROZEN_WIRE_V1[code] != status:
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=anchor, col=0,
+                message=(f"wire code `{code}` maps to HTTP {status} but the "
+                         f"frozen v1 table says {FROZEN_WIRE_V1[code]}"),
+                symbol=f"errors.{name}.status-drift"))
+    for code in sorted(set(FROZEN_WIRE_V1) - set(live)):
+        findings.append(Finding(
+            rule=RULE_ID, path=f.path, line=1, col=0,
+            message=(f"frozen wire code `{code}` has no ApiError subclass; "
+                     f"removing a v1 code breaks deployed clients"),
+            symbol=f"errors.{code}.removed"))
+
+
+# --------------------------------------------------------------------------
+# (b) schema round-trips
+# --------------------------------------------------------------------------
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(target) in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+def _method(cls: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for item in cls.body:
+        if isinstance(item, ast.FunctionDef) and item.name == name:
+            return item
+    return None
+
+
+def _mentions_field(fn: ast.FunctionDef, field: str, *,
+                    as_self_attr: bool) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Constant) and node.value == field:
+            return True
+        if as_self_attr and isinstance(node, ast.Attribute) \
+                and node.attr == field \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "self":
+            return True
+        if isinstance(node, ast.keyword) and node.arg == field:
+            return True
+    return False
+
+
+def _check_schemas(f: SourceFile, findings: List[Finding]) -> Set[str]:
+    """Returns the set of schema classes whose from_json checks protocol."""
+    checking: Set[str] = set()
+    for cls in f.tree.body:
+        if not isinstance(cls, ast.ClassDef) or not _is_dataclass_decorated(cls):
+            continue
+        to_json = _method(cls, "to_json")
+        from_json = _method(cls, "from_json")
+        if to_json is None and from_json is None:
+            continue   # not a wire type
+        if to_json is None or from_json is None:
+            missing = "to_json" if to_json is None else "from_json"
+            findings.append(Finding(
+                rule=RULE_ID, path=f.path, line=cls.lineno, col=0,
+                message=f"wire dataclass `{cls.name}` lacks `{missing}`",
+                symbol=f"schemas.{cls.name}.{missing}"))
+            continue
+        for node in ast.walk(from_json):
+            if isinstance(node, ast.Call):
+                nm = dotted_name(node.func)
+                if nm and nm.split(".")[-1] == "check_protocol":
+                    checking.add(cls.name)
+        for item in cls.body:
+            if not isinstance(item, ast.AnnAssign) or \
+                    not isinstance(item.target, ast.Name):
+                continue
+            ann = ast.dump(item.annotation)
+            if "ClassVar" in ann:
+                continue
+            field = item.target.id
+            for fn, side, self_attr in ((to_json, "to_json", True),
+                                        (from_json, "from_json", False)):
+                if not _mentions_field(fn, field, as_self_attr=self_attr):
+                    findings.append(Finding(
+                        rule=RULE_ID, path=f.path, line=item.lineno, col=0,
+                        message=(f"field `{cls.name}.{field}` does not appear "
+                                 f"in `{side}`; wire fields must round-trip "
+                                 f"on both sides"),
+                        symbol=f"schemas.{cls.name}.{field}.{side}"))
+    return checking
+
+
+# --------------------------------------------------------------------------
+# (c) protocol handshake in /v1/* POST handlers
+# --------------------------------------------------------------------------
+def _call_is_checking(call: ast.Call, checking_fns: Set[str],
+                      checking_schemas: Set[str]) -> bool:
+    func = call.func
+    if isinstance(func, ast.Attribute) and func.attr == "from_json":
+        recv = dotted_name(func.value)
+        if recv and recv.split(".")[-1] in checking_schemas:
+            return True
+    nm = dotted_name(func)
+    terminal = nm.split(".")[-1] if nm else None
+    return terminal in checking_fns if terminal else False
+
+
+def _check_server(f: SourceFile, checking_schemas: Set[str],
+                  findings: List[Finding]) -> None:
+    # fixpoint: a function in server.py "checks protocol" if its body calls
+    # check_protocol, a checking schema's from_json, or another checking fn
+    fns: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.FunctionDef):
+            fns.setdefault(node.name, []).append(node)
+    checking_fns: Set[str] = {"check_protocol"}
+    changed = True
+    while changed:
+        changed = False
+        for name, defs in fns.items():
+            if name in checking_fns:
+                continue
+            for d in defs:
+                for node in ast.walk(d):
+                    if isinstance(node, ast.Call) and _call_is_checking(
+                            node, checking_fns, checking_schemas):
+                        checking_fns.add(name)
+                        changed = True
+                        break
+                if name in checking_fns:
+                    break
+
+    for post in fns.get("do_POST", []):
+        for node in ast.walk(post):
+            if not isinstance(node, ast.If):
+                continue
+            route = _v1_route(node.test)
+            if route is None:
+                continue
+            ok = False
+            for stmt in node.body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call) and _call_is_checking(
+                            sub, checking_fns, checking_schemas):
+                        ok = True
+                        break
+                if ok:
+                    break
+            if not ok:
+                findings.append(Finding(
+                    rule=RULE_ID, path=f.path, line=node.lineno, col=0,
+                    message=(f"handler branch for `{route}` never checks "
+                             f"`protocol_version` (no check_protocol / "
+                             f"checking from_json on any call path)"),
+                    symbol=f"server.do_POST.{route}"))
+
+
+def _v1_route(test: ast.AST) -> Optional[str]:
+    """`path == \"/v1/x\"` (either operand order) -> the route string."""
+    if not isinstance(test, ast.Compare) or \
+            not any(isinstance(op, ast.Eq) for op in test.ops):
+        return None
+    for node in [test.left] + list(test.comparators):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and node.value.startswith("/v1/"):
+            return node.value
+    return None
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    errors_f = project.find_suffix(_ERRORS_SUFFIX)
+    if errors_f is not None and errors_f.tree is not None:
+        _check_errors(errors_f, findings)
+    checking_schemas: Set[str] = set()
+    schemas_f = project.find_suffix(_SCHEMAS_SUFFIX)
+    if schemas_f is not None and schemas_f.tree is not None:
+        checking_schemas = _check_schemas(schemas_f, findings)
+    server_f = project.find_suffix(_SERVER_SUFFIX)
+    if server_f is not None and server_f.tree is not None:
+        _check_server(server_f, checking_schemas, findings)
+    return findings
