@@ -299,9 +299,11 @@ class PrefixIndex:
         if key in self._entries:
             self._entries.move_to_end(key)
             return
-        self.pool.share(blocks)
+        # build the entry BEFORE taking the shares: _Entry / np.float32 can
+        # raise, and shares taken first would have no owner to release them
         e = _Entry(key, chain[:len(blocks)], list(blocks),
                    logits is not None, S, np.float32(age0), logits)
+        self.pool.share(blocks)
         self._entries[key] = e
         for d, b in zip(e.chain, e.blocks):
             self._chain.setdefault(d, (b, key))

@@ -426,6 +426,106 @@ def test_pool_stats_sharing_fields(setup):
 
 
 # ---------------------------------------------------------------------------
+# Resource-leak regressions (bugs found by repro-lint RL005): a raising
+# path between acquire and transfer must never strand block references
+# ---------------------------------------------------------------------------
+def test_register_failure_takes_no_refs(monkeypatch):
+    """PrefixIndex.register must build its entry BEFORE sharing the blocks:
+    a failure mid-registration may not leave unowned index refs behind."""
+    import repro.serve.prefix as prefix_mod
+    pool = SharedBlockPool(BlockAllocator(8))
+    idx = PrefixIndex(pool, block_size=4, max_entries=8)
+    blocks = pool.alloc(2)
+
+    def boom(*a, **k):
+        raise RuntimeError("entry construction failed")
+    monkeypatch.setattr(prefix_mod, "_Entry", boom)
+    toks = np.arange(8)
+    ages = np.linspace(0.0, 7.0, 8).astype(np.float32)
+    with pytest.raises(RuntimeError, match="entry construction failed"):
+        idx.register(toks, ages, blocks, S=8, age0=7.0)
+    assert idx.entries == 0
+    assert pool.total_refs == len(blocks)    # only the caller's own refs
+    pool.release(blocks)
+    assert pool.used == 0 and not pool._refs
+
+
+def test_admission_alloc_crash_releases_shared_hits(setup, monkeypatch):
+    """Prefix hits are shared BEFORE the suffix alloc; if the alloc raises,
+    the admission cleanup must drop those shares (they are parked on the
+    slot immediately), and the engine must recover and serve the retry."""
+    params, cfg = setup
+    S1 = 16                              # exactly 2 full blocks at BS=8
+    toks1 = (np.arange(3, 3 + S1) % 90).astype(np.int32)
+    ages1 = np.linspace(0.0, 30.0, S1).astype(np.float32)
+    toks2 = np.concatenate([toks1, np.arange(50, 58) % 90]).astype(np.int32)
+    ages2 = np.concatenate([ages1,
+                            np.linspace(31, 40, 8)]).astype(np.float32)
+    eng = BatchedEngine(params, cfg, slots=4, max_context=32, cache="paged",
+                        block_size=8, blocks=7, prefix_cache=True)
+    r1 = Request(tokens=toks1, ages=ages1, max_new=2)
+    eng.submit(r1)
+    eng.run()
+    assert eng.prefix.entries == 1       # 2 cached blocks to hit on
+
+    real_alloc = eng.pool.alloc
+    armed = {"on": True}
+
+    def flaky_alloc(n):
+        if armed["on"]:
+            armed["on"] = False
+            raise RuntimeError("injected alloc failure")
+        return real_alloc(n)
+    monkeypatch.setattr(eng.pool, "alloc", flaky_alloc)
+    r2 = Request(tokens=toks2, ages=ages2, max_new=2)
+    eng.submit(r2)
+    with pytest.raises(RuntimeError, match="injected alloc failure"):
+        eng.run()
+    # the crashed admission's shares are gone: only the index holds refs
+    assert eng.pool.used == 2 and eng.pool.total_refs == 2
+    # the request went back on the queue and the next run serves it
+    done = eng.run()
+    assert r2 in done and r2.error is None and len(r2.out_tokens) == 2
+    assert eng.pool_stats()["prefix_cache"]["partial_hits"] >= 1
+    eng.drop_prefix_cache()
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+def test_cow_failure_mid_fork_leaks_no_blocks(setup, monkeypatch):
+    """A COW copy that crashes after its destination block was allocated
+    must release that block on the way out; the loop thread fails the
+    in-flight forks and the pool drains to zero."""
+    import repro.serve.engine as engine_mod
+    params, cfg = setup
+    real = engine_mod._cow_block_jit
+    fired = {"on": False}
+
+    def flaky(*a, **k):
+        if not fired["on"]:
+            fired["on"] = True
+            raise RuntimeError("injected COW failure")
+        return real(*a, **k)
+    monkeypatch.setattr(engine_mod, "_cow_block_jit", flaky)
+    eng = BatchedEngine(params, cfg, slots=K, max_context=W, cache="paged",
+                        block_size=BS).start()
+    try:
+        parent = Request(tokens=TOKS, ages=AGES, max_new=5, hold=True,
+                         request_id="cow")
+        eng.submit(parent)
+        kids = eng.fork("cow", 2, uniforms=_uniforms(2, 5, cfg.vocab_size))
+        deadline = time.monotonic() + 120
+        while not all(k.done for k in kids) and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert all(k.done for k in kids)
+    finally:
+        eng.stop()
+    assert fired["on"], "fork decode must have attempted a COW"
+    assert any(isinstance(k.error, RuntimeError)
+               and "injected COW failure" in str(k.error) for k in kids)
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+# ---------------------------------------------------------------------------
 # Wire: schemas + /v1/futures + RemoteBackend
 # ---------------------------------------------------------------------------
 def test_futures_wire_roundtrip():

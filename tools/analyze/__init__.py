@@ -1,12 +1,18 @@
-"""repro-lint: AST-based invariant analyzer for this repository.
+"""repro-lint: interprocedural AST invariant analyzer for this repository.
 
-Four repo-specific rules, all built on the stdlib ``ast`` module (no
-third-party dependencies):
+Seven repo-specific rules, all built on the stdlib ``ast`` module (no
+third-party dependencies).  Since v2 the analyzer is interprocedural: a
+project-wide call graph (``callgraph.py``) resolves ``self.method()`` /
+``self.field.method()`` / bare-name / module-attribute calls and
+propagates markers transitively, and a per-function control-flow
+interpreter (``cfg.py``) walks branches, loops, ``try/except/finally``,
+``with``, and early returns path-sensitively.
 
 * **RL001 lock discipline** -- fields annotated ``# guarded-by: _lock`` or
   ``# guarded-by: engine-thread`` may only be touched under ``with
   self._lock`` / in methods marked ``# repro-lint: engine-thread-only``
-  (or ``holds=_lock``).  Turns the prose contract in
+  (or ``holds=_lock``); both markers are also *derived* through the call
+  graph when every caller has them.  Turns the prose contract in
   ``serve/engine.py`` into a race detector.
 * **RL002 trace purity** -- module-level ``jax.jit`` functions (and the
   same-module helpers they trace into) must not host-sync: no
@@ -15,15 +21,30 @@ third-party dependencies):
   no mutation of containers that outlive the trace.
 * **RL003 kernel<->oracle pairing** -- every public kernel in
   ``src/repro/kernels/`` needs a ``<name>_ref`` oracle in
-  ``kernels/ref.py`` and at least one test referencing both names.
+  ``kernels/ref.py`` and at least one test referencing both names; the
+  wrapper and oracle must agree on positional parameter names and order.
 * **RL004 wire stability** -- the ``ApiError`` code->HTTP-status table is
   frozen, every wire dataclass field must round-trip through
   ``to_json``/``from_json``, and every POST ``/v1/*`` handler must check
   ``protocol_version``.
+* **RL005 resource discipline** -- block handles from
+  ``BlockAllocator.alloc`` / ``SharedBlockPool.alloc``/``.share`` must be
+  released, stored into ``self.*`` state, or handed to a
+  ``# repro-lint: transfers-ownership`` callee on every path out of the
+  function, including raise edges of intervening calls (``resources.py``).
+* **RL006 host-sync purity** -- methods marked ``# repro-lint: hot-path``
+  and everything reachable from them through the call graph (stopping at
+  jit boundaries) must not implicitly sync device->host; the engine's one
+  budgeted packed sync carries a reviewed suppression (``hostsync.py``).
+* **RL007 Pallas kernel geometry** -- for each ``pl.pallas_call``:
+  index-map arity == ``len(grid) + num_scalar_prefetch``, kernel
+  positional signature matches refs+inputs+outputs+scratch, ``pltpu.VMEM``
+  scratch dtypes are explicit, and prefetched-table indexing sits under a
+  ``pl.when`` guard (``pallas.py``).
 
 Run ``python -m tools.analyze --help`` (or the ``repro-lint`` console
-script) for usage; see the README "Static analysis" section for the
-annotation conventions.
+script) for usage; see the README "Static analysis" section for the full
+annotation grammar and triage runbook.
 """
 from .core import Finding, Project, SourceFile  # noqa: F401
 

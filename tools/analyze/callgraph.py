@@ -1,0 +1,405 @@
+"""Project-wide call graph with class/method resolution (stdlib-only).
+
+Built once per lint run and shared by every rule.  Nodes are top-level
+functions and class methods; edges are resolved call sites.  Resolution
+is deliberately conservative -- only calls we can pin to a project
+definition become edges:
+
+* ``self.m(...)``            -- method of the enclosing class or a base;
+* ``self.field.m(...)``      -- via field-type inference (``self.field =
+  ClassName(...)`` anywhere in the class, or an annotated ``__init__``
+  parameter stored into the field);
+* ``name(...)``              -- same-module def, imported symbol (one
+  re-export chase through ``__init__`` modules, depth-limited), or a
+  class constructor (edge lands on ``__init__``);
+* ``alias.name(...)``        -- through a module import alias.
+
+Calls written inside nested ``def``/``lambda`` bodies are attributed to
+the enclosing top-level function (an over-approximation: the closure
+*may* run there), but with ``locked=False`` -- the closure may also run
+after the ``with self._lock`` block exits.
+
+On top of the graph, three marker fixpoints (all monotone -- they only
+ever add):
+
+* :func:`propagate_all_callers` -- a function inherits a marker
+  (``engine-thread-only``) when every known caller carries it;
+* :func:`propagate_holds` -- a function holds ``_lock`` when every
+  inbound edge is either lexically under ``with self._lock`` or comes
+  from a holder;
+* :func:`propagate_reachable` -- forward closure (``hot-path``) from
+  explicitly marked seeds, not descending into jitted callees (those
+  run on device and are RL002's problem).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Project, SourceFile, dotted_name
+from .purity import _jit_decoration
+
+_REEXPORT_DEPTH = 4
+
+
+@dataclasses.dataclass
+class CallSite:
+    caller: "FuncInfo"
+    callee: "FuncInfo"
+    node: ast.Call
+    locked: bool          # lexically under ``with self._lock`` in the caller
+
+
+class FuncInfo:
+    def __init__(self, path: str, module: str, cls: Optional[str],
+                 node: ast.FunctionDef, file: SourceFile):
+        self.path = path
+        self.module = module
+        self.cls = cls                      # class name or None
+        self.name = node.name
+        self.qualname = f"{cls}.{node.name}" if cls else node.name
+        self.fid = f"{path}::{self.qualname}"
+        self.node = node
+        self.file = file
+        self.markers: Set[str] = file.markers_for_def(node)
+        self.is_jit = any(_jit_decoration(d) for d in node.decorator_list)
+        self.calls: List[CallSite] = []     # outgoing
+        self.callers: List[CallSite] = []   # incoming
+
+
+class _Class:
+    def __init__(self, module: "_Module", node: ast.ClassDef):
+        self.module = module
+        self.node = node
+        self.name = node.name
+        self.methods: Dict[str, FuncInfo] = {}
+        self.base_names: List[str] = [
+            n for n in (dotted_name(b) for b in node.bases) if n]
+        self.field_types: Dict[str, str] = {}   # self.X -> class name (unresolved)
+
+
+class _Module:
+    def __init__(self, name: str, file: SourceFile, is_pkg: bool):
+        self.name = name
+        self.file = file
+        self.is_pkg = is_pkg
+        self.defs: Dict[str, FuncInfo] = {}
+        self.classes: Dict[str, _Class] = {}
+        # alias -> (module dotted name, symbol or None for module imports)
+        self.imports: Dict[str, Tuple[str, Optional[str]]] = {}
+
+
+def _module_name(path: str, src_rel: str) -> Tuple[str, bool]:
+    """(dotted module name, is_package) for a repo-relative source path."""
+    first = src_rel.split("/", 1)[0]
+    p = path
+    if p.startswith(first + "/"):
+        p = p[len(first) + 1:]
+    if p.endswith(".py"):
+        p = p[:-3]
+    is_pkg = p.endswith("/__init__") or p == "__init__"
+    if is_pkg:
+        p = p[:-len("/__init__")] if "/" in p else ""
+    return p.replace("/", "."), is_pkg
+
+
+class CallGraph:
+    def __init__(self) -> None:
+        self.functions: List[FuncInfo] = []
+        self.by_fid: Dict[str, FuncInfo] = {}
+        self.modules: Dict[str, _Module] = {}
+        self._by_node: Dict[int, FuncInfo] = {}      # id(def node) -> info
+        self.call_by_node: Dict[int, CallSite] = {}  # id(call node) -> site
+
+    def func_for(self, node: ast.AST) -> Optional[FuncInfo]:
+        return self._by_node.get(id(node))
+
+    # -- symbol resolution ---------------------------------------------------
+    def _resolve_symbol(self, module: _Module, name: str,
+                        depth: int = 0) -> Optional[object]:
+        """FuncInfo or _Class that ``name`` denotes inside ``module``."""
+        if name in module.defs:
+            return module.defs[name]
+        if name in module.classes:
+            return module.classes[name]
+        imp = module.imports.get(name)
+        if imp is None or depth >= _REEXPORT_DEPTH:
+            return None
+        mod_name, sym = imp
+        target = self.modules.get(mod_name)
+        if target is None:
+            return None
+        if sym is None:
+            return target                    # a module alias
+        return self._resolve_symbol(target, sym, depth + 1)
+
+    def _resolve_class(self, module: _Module, name: str) -> Optional[_Class]:
+        hit = self._resolve_symbol(module, name)
+        return hit if isinstance(hit, _Class) else None
+
+    def _method_of(self, cls: _Class, name: str,
+                   depth: int = 0) -> Optional[FuncInfo]:
+        if name in cls.methods:
+            return cls.methods[name]
+        if depth >= _REEXPORT_DEPTH:
+            return None
+        for base in cls.base_names:
+            b = self._resolve_class(cls.module, base)
+            if b is not None:
+                hit = self._method_of(b, name, depth + 1)
+                if hit is not None:
+                    return hit
+        return None
+
+    def _constructor(self, cls: _Class) -> Optional[FuncInfo]:
+        return self._method_of(cls, "__init__")
+
+
+def build(project: Project) -> CallGraph:
+    g = CallGraph()
+    # pass 1: modules, defs, classes, imports
+    for f in project.files:
+        if f.tree is None:
+            continue
+        mod_name, is_pkg = _module_name(f.path, project.src_rel)
+        m = _Module(mod_name, f, is_pkg)
+        g.modules[mod_name] = m
+        for node in f.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                fi = FuncInfo(f.path, mod_name, None, node, f)
+                m.defs[node.name] = fi
+                g.functions.append(fi)
+                g.by_fid[fi.fid] = fi
+                g._by_node[id(node)] = fi
+            elif isinstance(node, ast.ClassDef):
+                ci = _Class(m, node)
+                m.classes[node.name] = ci
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        fi = FuncInfo(f.path, mod_name, node.name, item, f)
+                        ci.methods[item.name] = fi
+                        g.functions.append(fi)
+                        g.by_fid[fi.fid] = fi
+                        g._by_node[id(item)] = fi
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".", 1)[0]
+                    target = alias.name if alias.asname else \
+                        alias.name.split(".", 1)[0]
+                    m.imports[bound] = (target, None)
+            elif isinstance(node, ast.ImportFrom):
+                base = _import_base(m, node)
+                if base is None:
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    m.imports[alias.asname or alias.name] = (base, alias.name)
+    # pass 2: field types (needs the class tables)
+    for m in g.modules.values():
+        for ci in m.classes.values():
+            _collect_field_types(g, ci)
+    # pass 3: call sites
+    for m in g.modules.values():
+        for fi in list(m.defs.values()):
+            _collect_calls(g, m, None, fi)
+        for ci in m.classes.values():
+            for fi in ci.methods.values():
+                _collect_calls(g, m, ci, fi)
+    return g
+
+
+def _import_base(m: _Module, node: ast.ImportFrom) -> Optional[str]:
+    """Absolute dotted module a ``from X import ...`` refers to."""
+    if node.level == 0:
+        return node.module
+    parts = m.name.split(".") if m.name else []
+    if not m.is_pkg:
+        parts = parts[:-1]
+    hops = node.level - 1
+    if hops:
+        if hops > len(parts):
+            return None
+        parts = parts[:-hops] if hops else parts
+    if node.module:
+        parts = parts + node.module.split(".")
+    return ".".join(parts) if parts else None
+
+
+def _collect_field_types(g: CallGraph, ci: _Class) -> None:
+    ann_params: Dict[str, str] = {}
+    init = ci.methods.get("__init__")
+    if init is not None:
+        a = init.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.annotation is not None:
+                nm = dotted_name(p.annotation)
+                if nm:
+                    ann_params[p.arg] = nm.rsplit(".", 1)[-1]
+    for fi in ci.methods.values():
+        for sub in ast.walk(fi.node):
+            if not isinstance(sub, ast.Assign):
+                continue
+            for t in sub.targets:
+                if not (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    continue
+                v = sub.value
+                if isinstance(v, ast.Call):
+                    nm = dotted_name(v.func)
+                    if nm:
+                        cand = nm.rsplit(".", 1)[-1]
+                        if g._resolve_class(ci.module, cand) is not None \
+                                or cand in ci.module.classes:
+                            ci.field_types.setdefault(t.attr, cand)
+                elif isinstance(v, ast.Name) and fi.name == "__init__" \
+                        and v.id in ann_params:
+                    ci.field_types.setdefault(t.attr, ann_params[v.id])
+
+
+class _CallCollector(ast.NodeVisitor):
+    def __init__(self, g: CallGraph, m: _Module, cls: Optional[_Class],
+                 fi: FuncInfo):
+        self.g = g
+        self.m = m
+        self.cls = cls
+        self.fi = fi
+        self.lock_depth = 0
+        self.fn_depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        takes = any(isinstance(i.context_expr, ast.Attribute)
+                    and i.context_expr.attr == "_lock"
+                    and isinstance(i.context_expr.value, ast.Name)
+                    and i.context_expr.value.id == "self"
+                    for i in node.items)
+        if takes:
+            self.lock_depth += 1
+            self.generic_visit(node)
+            self.lock_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def _enter_fn(self, node: ast.AST) -> None:
+        # nested def/lambda: calls attributed here, but the closure may run
+        # without the lock
+        self.fn_depth += 1
+        saved, self.lock_depth = self.lock_depth, 0
+        self.generic_visit(node)
+        self.lock_depth = saved
+        self.fn_depth -= 1
+
+    visit_FunctionDef = _enter_fn
+    visit_AsyncFunctionDef = _enter_fn
+    visit_Lambda = _enter_fn
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = self._resolve(node.func)
+        if callee is not None and callee is not self.fi:
+            site = CallSite(caller=self.fi, callee=callee, node=node,
+                            locked=self.lock_depth > 0)
+            self.fi.calls.append(site)
+            callee.callers.append(site)
+            self.g.call_by_node[id(node)] = site
+        self.generic_visit(node)
+
+    def _resolve(self, func: ast.AST) -> Optional[FuncInfo]:
+        g, m = self.g, self.m
+        if isinstance(func, ast.Name):
+            hit = g._resolve_symbol(m, func.id)
+            if isinstance(hit, FuncInfo):
+                return hit
+            if isinstance(hit, _Class):
+                return g._constructor(hit)
+            return None
+        if not isinstance(func, ast.Attribute):
+            return None
+        recv = func.value
+        # self.m(...)
+        if isinstance(recv, ast.Name) and recv.id == "self":
+            if self.cls is not None:
+                return g._method_of(self.cls, func.attr)
+            return None
+        # self.field.m(...)
+        if isinstance(recv, ast.Attribute) and \
+                isinstance(recv.value, ast.Name) and recv.value.id == "self":
+            if self.cls is not None:
+                tname = self.cls.field_types.get(recv.attr)
+                if tname:
+                    tcls = g._resolve_class(m, tname) or \
+                        m.classes.get(tname)
+                    if tcls is not None:
+                        return g._method_of(tcls, func.attr)
+            return None
+        # alias.name(...)
+        if isinstance(recv, ast.Name):
+            imp = m.imports.get(recv.id)
+            if imp is not None and imp[1] is None:
+                target = g.modules.get(imp[0])
+                if target is not None:
+                    hit = g._resolve_symbol(target, func.attr)
+                    if isinstance(hit, FuncInfo):
+                        return hit
+                    if isinstance(hit, _Class):
+                        return g._constructor(hit)
+        return None
+
+
+def _collect_calls(g: CallGraph, m: _Module, cls: Optional[_Class],
+                   fi: FuncInfo) -> None:
+    col = _CallCollector(g, m, cls, fi)
+    for stmt in fi.node.body:
+        col.visit(stmt)
+
+
+# --------------------------------------------------------------------------
+# marker fixpoints
+# --------------------------------------------------------------------------
+def propagate_all_callers(graph: CallGraph, marker: str) -> Set[str]:
+    """Fids carrying ``marker`` explicitly or because *every* caller does."""
+    marked = {f.fid for f in graph.functions if marker in f.markers}
+    changed = True
+    while changed:
+        changed = False
+        for f in graph.functions:
+            if f.fid in marked or not f.callers:
+                continue
+            if all(s.caller.fid in marked for s in f.callers):
+                marked.add(f.fid)
+                changed = True
+    return marked
+
+
+def propagate_holds(graph: CallGraph) -> Set[str]:
+    """Fids that hold ``_lock``: explicit ``holds=_lock`` markers, plus
+    functions whose every inbound edge is lexically locked or comes from
+    a holder."""
+    holders = {f.fid for f in graph.functions if "holds=_lock" in f.markers}
+    changed = True
+    while changed:
+        changed = False
+        for f in graph.functions:
+            if f.fid in holders or not f.callers:
+                continue
+            if all(s.locked or s.caller.fid in holders for s in f.callers):
+                holders.add(f.fid)
+                changed = True
+    return holders
+
+
+def propagate_reachable(graph: CallGraph, marker: str) -> Set[str]:
+    """Forward closure from ``marker`` seeds, skipping jitted callees."""
+    seeds = [f for f in graph.functions if marker in f.markers]
+    reach = {f.fid for f in seeds}
+    work = list(seeds)
+    while work:
+        f = work.pop()
+        for s in f.calls:
+            if s.callee.is_jit:
+                continue
+            if s.callee.fid not in reach:
+                reach.add(s.callee.fid)
+                work.append(s.callee)
+    return reach

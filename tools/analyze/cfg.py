@@ -1,0 +1,228 @@
+"""Lightweight per-function control flow for path-sensitive rules.
+
+Not a materialized basic-block graph: a *structured abstract
+interpreter* that walks a function body statement by statement, carrying
+a set of abstract states, and records every way control can leave the
+function in a :class:`Sinks` object:
+
+* ``raised``    -- (statement, state) pairs where an exception can
+  escape; the state is the one *before* the statement unless the
+  domain's ``transfer`` says otherwise (a release call, for example,
+  counts as having released even on its own raise edge);
+* ``returned``  -- states at explicit returns and at body fallthrough;
+* ``broke`` / ``continued`` -- scoped by the innermost loop.
+
+Structure handled: ``if``/``else``, ``while``/``for`` (iterated to a
+fixpoint, bounded), ``try``/``except``/``else``/``finally`` (catch-all
+handlers fully consume the body's raise edges; ``finally`` bodies are
+replayed on every outflow class), ``with``, ``assert``, early returns.
+Nested ``def``/``class`` bodies are opaque.
+
+The domain object supplies the semantics::
+
+    initial() -> state
+    key(state) -> hashable                  # dedup / fixpoint detection
+    collapse(states) -> [state]             # when the state set overflows
+    transfer(stmt, state) -> (state', raise_state_or_None)
+    may_raise_expr(expr) -> bool            # for tests / iterables / with
+    refine(test, state, branch) -> state | None   # narrowing; None prunes
+                                                  # an infeasible branch
+    at_return(stmt, state) -> state
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+MAX_STATES = 64
+MAX_LOOP_ITERS = 10
+
+
+class Sinks:
+    def __init__(self, raised=None, returned=None, broke=None,
+                 continued=None):
+        self.raised: List[Tuple[ast.stmt, object]] = \
+            raised if raised is not None else []
+        self.returned: List[object] = returned if returned is not None else []
+        self.broke: List[object] = broke if broke is not None else []
+        self.continued: List[object] = \
+            continued if continued is not None else []
+
+
+def _catches_all(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = []
+    if isinstance(t, ast.Tuple):
+        names = [e.id for e in t.elts if isinstance(e, ast.Name)]
+    elif isinstance(t, ast.Name):
+        names = [t.id]
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+class Flow:
+    def __init__(self, domain):
+        self.d = domain
+
+    def run(self, body: List[ast.stmt]) -> Sinks:
+        sinks = Sinks()
+        out = self._body(body, [self.d.initial()], sinks)
+        sinks.returned.extend(out)           # implicit return at fallthrough
+        return sinks
+
+    # -- helpers -------------------------------------------------------------
+    def _dedup(self, states: List[object]) -> List[object]:
+        seen, out = set(), []
+        for s in states:
+            k = self.d.key(s)
+            if k not in seen:
+                seen.add(k)
+                out.append(s)
+        if len(out) > MAX_STATES:
+            out = self.d.collapse(out)
+        return out
+
+    def _keys(self, states: List[object]) -> set:
+        return {self.d.key(s) for s in states}
+
+    def _body(self, body: List[ast.stmt], states: List[object],
+              sinks: Sinks) -> List[object]:
+        for stmt in body:
+            if not states:
+                break
+            states = self._stmt(stmt, states, sinks)
+        return states
+
+    # -- dispatch ------------------------------------------------------------
+    def _stmt(self, stmt: ast.stmt, states: List[object],
+              sinks: Sinks) -> List[object]:
+        d = self.d
+        if isinstance(stmt, ast.If):
+            if d.may_raise_expr(stmt.test):
+                for s in states:
+                    sinks.raised.append((stmt, s))
+            t = [r for r in (d.refine(stmt.test, s, True) for s in states)
+                 if r is not None]
+            f = [r for r in (d.refine(stmt.test, s, False) for s in states)
+                 if r is not None]
+            out = (self._body(stmt.body, t, sinks)
+                   + self._body(stmt.orelse, f, sinks))
+            return self._dedup(out)
+        if isinstance(stmt, (ast.While, ast.For)):
+            return self._loop(stmt, states, sinks)
+        if isinstance(stmt, ast.Try):
+            return self._try(stmt, states, sinks)
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if d.may_raise_expr(item.context_expr):
+                    for s in states:
+                        sinks.raised.append((stmt, s))
+            return self._body(stmt.body, states, sinks)
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None and d.may_raise_expr(stmt.value):
+                for s in states:
+                    sinks.raised.append((stmt, s))
+            for s in states:
+                sinks.returned.append(d.at_return(stmt, s))
+            return []
+        if isinstance(stmt, ast.Raise):
+            for s in states:
+                sinks.raised.append((stmt, s))
+            return []
+        if isinstance(stmt, ast.Break):
+            sinks.broke.extend(states)
+            return []
+        if isinstance(stmt, ast.Continue):
+            sinks.continued.extend(states)
+            return []
+        if isinstance(stmt, ast.Assert):
+            for s in states:                  # a failing assert raises
+                sinks.raised.append((stmt, s))
+            return [r for r in (d.refine(stmt.test, s, True) for s in states)
+                    if r is not None]
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Import, ast.ImportFrom,
+                             ast.Pass, ast.Global, ast.Nonlocal)):
+            return states
+        # simple statement: Assign / AugAssign / AnnAssign / Expr / Delete
+        out = []
+        for s in states:
+            ns, raise_state = d.transfer(stmt, s)
+            if raise_state is not None:
+                sinks.raised.append((stmt, raise_state))
+            out.append(ns)
+        return self._dedup(out)
+
+    def _loop(self, stmt, states: List[object], sinks: Sinks) -> List[object]:
+        d = self.d
+        head = stmt.iter if isinstance(stmt, ast.For) else stmt.test
+        if d.may_raise_expr(head):
+            for s in states:
+                sinks.raised.append((stmt, s))
+        inner = Sinks(raised=sinks.raised, returned=sinks.returned,
+                      broke=[], continued=[])
+        entry = self._dedup(list(states))
+        for _ in range(MAX_LOOP_ITERS):
+            body_out = self._body(stmt.body, list(entry), inner)
+            nxt = self._dedup(entry + body_out + inner.continued)
+            inner.continued = []
+            if self._keys(nxt) == self._keys(entry):
+                break
+            entry = nxt
+        # the loop may run zero times (entry) or be left via break
+        out = self._dedup(entry + inner.broke)
+        if stmt.orelse:
+            out = self._dedup(self._body(stmt.orelse, out, sinks))
+        return out
+
+    def _try(self, stmt: ast.Try, states: List[object],
+             sinks: Sinks) -> List[object]:
+        has_finally = bool(stmt.finalbody)
+        if has_finally:
+            inner = Sinks()
+        else:
+            inner = Sinks(raised=[], returned=sinks.returned,
+                          broke=sinks.broke, continued=sinks.continued)
+        body_out = self._body(stmt.body, states, inner)
+        body_raised = inner.raised
+        catch_all = any(_catches_all(h) for h in stmt.handlers)
+
+        h_states = self._dedup([s for (_st, s) in body_raised])
+        escaped: List[Tuple[ast.stmt, object]] = []
+        if stmt.handlers:
+            hsinks = Sinks(raised=escaped, returned=inner.returned,
+                           broke=inner.broke, continued=inner.continued)
+            handler_out: List[object] = []
+            for h in stmt.handlers:
+                handler_out += self._body(h.body, list(h_states), hsinks)
+        else:
+            handler_out = []
+        if not catch_all:
+            escaped += body_raised           # may be uncaught
+
+        orelse_out = (self._body(stmt.orelse, body_out, inner)
+                      if stmt.orelse else body_out)
+        normal_out = self._dedup(handler_out + orelse_out)
+
+        if not has_finally:
+            sinks.raised.extend(escaped)
+            return normal_out
+
+        # replay finalbody per outflow class; its own raises go outward
+        def replay(sts: List[object]) -> List[object]:
+            fsinks = Sinks(raised=sinks.raised, returned=sinks.returned,
+                           broke=sinks.broke, continued=sinks.continued)
+            return self._body(stmt.finalbody, list(sts), fsinks)
+
+        out = replay(normal_out)
+        for (st, s) in escaped:
+            for s2 in replay([s]):
+                sinks.raised.append((st, s2))
+        for s in inner.returned:
+            sinks.returned.extend(replay([s]))
+        for s in inner.broke:
+            sinks.broke.extend(replay([s]))
+        for s in inner.continued:
+            sinks.continued.extend(replay([s]))
+        return self._dedup(out)

@@ -9,14 +9,23 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 from . import baseline as baseline_mod
-from . import locks, pairing, purity, wire
+from . import callgraph as callgraph_mod
+from . import hostsync, locks, pairing, purity, resources, wire
+from . import pallas as pallas_mod
 from .core import Finding, Project, apply_suppressions
 
 RULES = {
     locks.RULE_ID: (locks.check, "lock discipline for guarded-by fields"),
     purity.RULE_ID: (purity.check, "trace purity in module-level jit fns"),
-    pairing.RULE_ID: (pairing.check, "kernel <-> ref.py oracle pairing"),
+    pairing.RULE_ID: (pairing.check,
+                      "kernel <-> ref.py oracle pairing + signature parity"),
     wire.RULE_ID: (wire.check, "wire protocol stability (errors/schemas/handlers)"),
+    resources.RULE_ID: (resources.check,
+                        "alloc/release discipline on all paths (block pool)"),
+    hostsync.RULE_ID: (hostsync.check,
+                       "no device->host syncs on the engine hot path"),
+    pallas_mod.RULE_ID: (pallas_mod.check,
+                         "Pallas grid/BlockSpec/scratch/guard geometry"),
 }
 
 DEFAULT_BASELINE = "tools/analyze/baseline.json"
@@ -40,11 +49,12 @@ def run_lint(root: Path, *, select: Optional[Sequence[str]] = None,
              tests_rel: str = "tests") -> LintResult:
     """Programmatic entry point (used by tests and the CLI)."""
     project = Project(root, src_rel=src_rel, tests_rel=tests_rel)
+    graph = callgraph_mod.build(project)
     findings: List[Finding] = list(project.parse_errors())
     wanted = set(select) if select else set(RULES)
     for rule_id, (check, _) in RULES.items():
         if rule_id in wanted:
-            findings.extend(check(project))
+            findings.extend(check(project, graph))
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     findings, suppressed = apply_suppressions(project, findings)
     base: Dict[str, dict] = {}
@@ -65,12 +75,36 @@ def _emit(findings: List[Finding], fmt: str, out) -> None:
               file=out)
 
 
+def _fix_baseline(root: Path, res: LintResult,
+                  target: Path) -> int:
+    """Rewrite the baseline; print the fingerprint diff for PR review."""
+    old = baseline_mod.load(target) if target.is_file() else {}
+    current = res.new + res.grandfathered
+    new_fps = {f.fingerprint: f for f in current}
+    added = [fp for fp in new_fps if fp not in old]
+    removed = [fp for fp in old if fp not in new_fps]
+    for fp in sorted(added):
+        f = new_fps[fp]
+        print(f"+ {fp} {f.rule} {f.path} {f.symbol}")
+    for fp in sorted(removed):
+        rec = old[fp]
+        print(f"- {fp} {rec.get('rule', '?')} {rec.get('path', '?')} "
+              f"{rec.get('symbol', '?')}")
+    baseline_mod.save(target, current)
+    print(f"repro-lint: baseline rewritten at {target}: "
+          f"{len(added)} added, {len(removed)} removed, "
+          f"{len(new_fps)} total", file=sys.stderr)
+    return 0
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro-lint",
         description="AST-based invariant analyzer for this repo "
                     "(RL001 locks, RL002 trace purity, RL003 kernel/oracle "
-                    "pairing, RL004 wire stability).")
+                    "pairing, RL004 wire stability, RL005 resource "
+                    "discipline, RL006 hot-path syncs, RL007 Pallas "
+                    "geometry).")
     ap.add_argument("--root", type=Path, default=Path("."),
                     help="repository root (default: cwd)")
     ap.add_argument("--src", default="src/repro",
@@ -88,6 +122,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="ignore any baseline file")
     ap.add_argument("--write-baseline", action="store_true",
                     help="write all current findings to the baseline and exit 0")
+    ap.add_argument("--fix-baseline", action="store_true",
+                    help="rewrite the baseline and print the fingerprint "
+                         "diff (+added/-removed) for PR review")
     ap.add_argument("--show-baselined", action="store_true",
                     help="also print grandfathered findings")
     ap.add_argument("--list-rules", action="store_true")
@@ -114,6 +151,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     except (OSError, ValueError) as e:
         print(f"repro-lint: error: {e}", file=sys.stderr)
         return 2
+
+    if args.fix_baseline:
+        target = args.baseline or (root / DEFAULT_BASELINE)
+        return _fix_baseline(root, res, target)
 
     if args.write_baseline:
         target = args.baseline or (root / DEFAULT_BASELINE)

@@ -15,7 +15,7 @@ import tokenize
 from pathlib import Path
 from typing import Dict, List, Optional, Set, Tuple
 
-RULE_IDS = ("RL001", "RL002", "RL003", "RL004")
+RULE_IDS = ("RL001", "RL002", "RL003", "RL004", "RL005", "RL006", "RL007")
 
 # --- annotation grammar -----------------------------------------------------
 # field declaration:   self.pending = []          # guarded-by: _lock
@@ -109,7 +109,8 @@ class SourceFile:
         """repro-lint markers on a ``def`` line or the line just above it.
 
         Recognized markers: ``engine-thread-only``, ``holds=_lock``,
-        ``traced`` (space-separated on one comment).
+        ``traced``, ``hot-path``, ``transfers-ownership`` (space-separated
+        on one comment).
         """
         out: Set[str] = set()
         lineno = getattr(node, "lineno", None)
@@ -127,7 +128,8 @@ class SourceFile:
             if not m:
                 continue
             for tok in m.group(1).split():
-                if tok in ("engine-thread-only", "holds=_lock", "traced"):
+                if tok in ("engine-thread-only", "holds=_lock", "traced",
+                           "hot-path", "transfers-ownership"):
                     out.add(tok)
         return out
 

@@ -1,0 +1,303 @@
+"""RL006: no device->host syncs on the engine's hot path.
+
+Seeds are functions marked ``# repro-lint: hot-path`` (the engine tick).
+The hot set is the forward call-graph closure from the seeds, *not*
+descending into jitted callees (device code is RL002's territory).
+
+Inside a hot function:
+
+* ``.item()`` / ``.block_until_ready()`` / ``jax.device_get`` are
+  flagged unconditionally -- these APIs only exist for device values;
+* ``np.*`` calls (including module-level aliases like ``_to_host =
+  np.asarray``), ``.tolist()`` / ``.to_py()``, and
+  ``bool()/int()/float()/complex()`` casts are flagged only when an
+  argument (or the receiver) is *device-valued*.
+
+Device-ness is a may-analysis fixpoint over the call graph: results of
+jit entries and ``jnp.*``/``jax.*`` calls are device; device-ness flows
+through assignments (including tuple unpacking), subscripts, arithmetic,
+``self`` fields that any method stores a device value into, call
+arguments (caller to callee parameter), and return values (``np.*``
+results are host, which is what makes a properly fetched array clean
+downstream).
+
+The engine's one sanctioned packed sync per tick is expected to carry an
+inline ``disable=RL006`` with its justification.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import callgraph as callgraph_mod
+from .callgraph import CallGraph, FuncInfo, propagate_reachable
+from .core import Finding, Project, attr_root, dotted_name
+
+RULE_ID = "RL006"
+HOT_MARK = "hot-path"
+
+_ALWAYS_SYNC_METHODS = {"item", "block_until_ready"}
+_GATED_SYNC_METHODS = {"tolist", "to_py"}
+_CAST_BUILTINS = {"bool", "int", "float", "complex"}
+_FIXPOINT_ROUNDS = 10
+
+
+class _ModuleAliases:
+    """numpy / jax import aliases plus module-level np-function aliases."""
+
+    def __init__(self, tree: ast.Module):
+        self.np: Set[str] = set()
+        self.jax: Set[str] = set()          # device-producing roots
+        self.np_funcs: Set[str] = set()     # X = np.asarray  style aliases
+        for node in tree.body:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".", 1)[0]
+                    if alias.name == "numpy" or \
+                            alias.name.startswith("numpy."):
+                        self.np.add(bound)
+                    elif alias.name == "jax" or alias.name.startswith("jax."):
+                        self.jax.add(bound)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "numpy":
+                    for alias in node.names:
+                        self.np_funcs.add(alias.asname or alias.name)
+                elif node.module and node.module.startswith("jax"):
+                    for alias in node.names:
+                        self.jax.add(alias.asname or alias.name)
+        for node in tree.body:          # _to_host = np.asarray
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Attribute) \
+                    and attr_root(node.value) in self.np:
+                self.np_funcs.add(node.targets[0].id)
+
+
+class _DeviceModel:
+    """Which params / returns / self-fields may hold device values."""
+
+    def __init__(self, graph: CallGraph, fids: Set[str]):
+        self.graph = graph
+        self.funcs = [f for f in graph.functions if f.fid in fids]
+        self.aliases: Dict[str, _ModuleAliases] = {}
+        self.dev_params: Dict[str, Set[str]] = {}
+        self.returns_dev: Dict[str, bool] = {}
+        self.dev_fields: Dict[Tuple[str, str], Set[str]] = {}
+        for f in self.funcs:
+            if f.path not in self.aliases and f.file.tree is not None:
+                self.aliases[f.path] = _ModuleAliases(f.file.tree)
+        self._fixpoint()
+
+    def _aliases_of(self, fi: FuncInfo) -> _ModuleAliases:
+        return self.aliases.get(fi.path) or _ModuleAliases(ast.Module([], []))
+
+    def _fixpoint(self) -> None:
+        for _ in range(_FIXPOINT_ROUNDS):
+            before = (sum(len(v) for v in self.dev_params.values()),
+                      sum(self.returns_dev.values()),
+                      sum(len(v) for v in self.dev_fields.values()))
+            for f in self.funcs:
+                self._scan_function(f)
+            after = (sum(len(v) for v in self.dev_params.values()),
+                     sum(self.returns_dev.values()),
+                     sum(len(v) for v in self.dev_fields.values()))
+            if after == before:
+                break
+
+    def _scan_function(self, fi: FuncInfo,
+                       report: Optional[List[Tuple[ast.Call, str]]] = None,
+                       ) -> None:
+        al = self._aliases_of(fi)
+        env: Set[str] = set(self.dev_params.get(fi.fid, ()))
+        field_key = (fi.path, fi.cls or "")
+
+        def is_dev(expr: ast.AST) -> bool:
+            if isinstance(expr, ast.Name):
+                return expr.id in env
+            if isinstance(expr, ast.Attribute):
+                if isinstance(expr.value, ast.Name) and \
+                        expr.value.id == "self":
+                    return expr.attr in self.dev_fields.get(field_key, ())
+                return False
+            if isinstance(expr, ast.Subscript):
+                return is_dev(expr.value)
+            if isinstance(expr, (ast.BinOp,)):
+                return is_dev(expr.left) or is_dev(expr.right)
+            if isinstance(expr, ast.UnaryOp):
+                return is_dev(expr.operand)
+            if isinstance(expr, ast.IfExp):
+                return is_dev(expr.body) or is_dev(expr.orelse)
+            if isinstance(expr, ast.Call):
+                return self._call_is_dev(expr, al)
+            if isinstance(expr, (ast.Tuple, ast.List)):
+                return any(is_dev(e) for e in expr.elts)
+            return False
+
+        def bind(target: ast.AST, dev: bool) -> None:
+            if isinstance(target, ast.Name):
+                if dev:
+                    env.add(target.id)
+            elif isinstance(target, (ast.Tuple, ast.List, ast.Starred)):
+                elts = (target.elts
+                        if isinstance(target, (ast.Tuple, ast.List))
+                        else [target.value])
+                for e in elts:
+                    bind(e, dev)
+            elif isinstance(target, ast.Attribute) and \
+                    isinstance(target.value, ast.Name) and \
+                    target.value.id == "self":
+                if dev:
+                    self.dev_fields.setdefault(field_key, set()).add(
+                        target.attr)
+            elif isinstance(target, ast.Subscript):
+                base = target.value
+                if isinstance(base, ast.Attribute) and \
+                        isinstance(base.value, ast.Name) and \
+                        base.value.id == "self":
+                    if dev:
+                        self.dev_fields.setdefault(field_key, set()).add(
+                            base.attr)
+
+        def visit_call(call: ast.Call) -> None:
+            site = self.graph.call_by_node.get(id(call))
+            if site is not None and not site.callee.is_jit:
+                callee = site.callee
+                pos = self._positional_params(callee)
+                for i, a in enumerate(call.args):
+                    if i < len(pos) and is_dev(a):
+                        self.dev_params.setdefault(callee.fid, set()).add(
+                            pos[i])
+                for kw in call.keywords:
+                    if kw.arg and is_dev(kw.value):
+                        self.dev_params.setdefault(callee.fid, set()).add(
+                            kw.arg)
+            if report is not None:
+                self._report_call(call, is_dev, al, report)
+
+        def walk_stmts(body: List[ast.stmt]) -> None:
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call):
+                        visit_call(sub)
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                    if stmt.value is None:
+                        continue
+                    dev = is_dev(stmt.value)
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        bind(t, dev)
+                elif isinstance(stmt, ast.Return):
+                    if stmt.value is not None and is_dev(stmt.value):
+                        self.returns_dev[fi.fid] = True
+                elif isinstance(stmt, ast.For):
+                    bind(stmt.target, is_dev(stmt.iter))
+                    walk_stmts(stmt.body)
+                    walk_stmts(stmt.orelse)
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    walk_stmts(stmt.body)
+                    walk_stmts(stmt.orelse)
+                elif isinstance(stmt, ast.Try):
+                    walk_stmts(stmt.body)
+                    for h in stmt.handlers:
+                        walk_stmts(h.body)
+                    walk_stmts(stmt.orelse)
+                    walk_stmts(stmt.finalbody)
+                elif isinstance(stmt, ast.With):
+                    walk_stmts(stmt.body)
+
+        # two passes so loop-carried device-ness stabilizes intra-function
+        walk_stmts(fi.node.body)
+        walk_stmts(fi.node.body)
+
+    def _call_is_dev(self, call: ast.Call, al: _ModuleAliases) -> bool:
+        site = self.graph.call_by_node.get(id(call))
+        if site is not None:
+            if site.callee.is_jit:
+                return True
+            return self.returns_dev.get(site.callee.fid, False)
+        func = call.func
+        root = attr_root(func) if isinstance(func, ast.Attribute) else None
+        if root is not None:
+            if dotted_name(func) == "jax.device_get":
+                return False                    # host by definition
+            if root in al.jax:
+                return True
+            if root in al.np:
+                return False
+        if isinstance(func, ast.Name):
+            if func.id in al.jax:
+                return True
+            if func.id in al.np_funcs or func.id in _CAST_BUILTINS:
+                return False
+        return False
+
+    @staticmethod
+    def _positional_params(fi: FuncInfo) -> List[str]:
+        a = fi.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if names and names[0] == "self" and fi.cls is not None:
+            names = names[1:]
+        return names
+
+    # -- sync detection ------------------------------------------------------
+    def _report_call(self, call: ast.Call, is_dev, al: _ModuleAliases,
+                     report: List[Tuple[ast.Call, str]]) -> None:
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in _ALWAYS_SYNC_METHODS:
+                report.append((call, f".{func.attr}()"))
+                return
+            if dotted_name(func) == "jax.device_get":
+                report.append((call, "jax.device_get"))
+                return
+            if func.attr in _GATED_SYNC_METHODS and is_dev(func.value):
+                report.append((call, f".{func.attr}()"))
+                return
+            root = attr_root(func)
+            if root in al.np and \
+                    (any(is_dev(a) for a in call.args)
+                     or any(is_dev(kw.value) for kw in call.keywords)):
+                report.append((call, dotted_name(func) or f".{func.attr}"))
+                return
+        elif isinstance(func, ast.Name):
+            hot_args = (any(is_dev(a) for a in call.args)
+                        or any(is_dev(kw.value) for kw in call.keywords))
+            if func.id in al.np_funcs and hot_args:
+                report.append((call, f"{func.id}(...)"))
+            elif func.id in _CAST_BUILTINS and hot_args:
+                report.append((call, f"{func.id}()"))
+
+    def findings_for(self, fi: FuncInfo) -> List[Tuple[ast.Call, str]]:
+        report: List[Tuple[ast.Call, str]] = []
+        self._scan_function(fi, report=report)
+        return report
+
+
+def check(project: Project, graph=None) -> List[Finding]:
+    if graph is None:
+        graph = callgraph_mod.build(project)
+    seeds = [f for f in graph.functions if HOT_MARK in f.markers]
+    if not seeds:
+        return []
+    hot = propagate_reachable(graph, HOT_MARK)
+    seed_names = ", ".join(sorted(f.qualname for f in seeds))
+    model = _DeviceModel(graph, hot)
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+    for fi in sorted(graph.functions, key=lambda f: (f.path, f.node.lineno)):
+        if fi.fid not in hot or fi.is_jit:
+            continue
+        for call, what in model.findings_for(fi):
+            fnd = Finding(
+                rule=RULE_ID, path=fi.path,
+                line=call.lineno, col=call.col_offset,
+                message=(f"device->host sync `{what}` in `{fi.qualname}`, "
+                         f"reachable from hot path `{seed_names}`; the "
+                         f"tick budget is one annotated packed sync"),
+                symbol=f"{fi.qualname}.hotsync.{what}")
+            if fnd.fingerprint not in seen:
+                seen.add(fnd.fingerprint)
+                findings.append(fnd)
+    return findings

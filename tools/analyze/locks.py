@@ -13,6 +13,12 @@ A field declared ``# guarded-by: engine-thread`` is single-thread state:
 it may only be touched in ``engine-thread-only`` methods.  ``__init__``
 is always exempt (the object is not yet shared).
 
+Both markers propagate through the call graph: a method whose *every*
+known caller is ``engine-thread-only`` inherits the marker, and a
+method reached only through ``with self._lock`` blocks (or from
+``holds=_lock`` holders) counts as a holder -- so internal helpers no
+longer need one annotation each.
+
 Accesses to a guarded field name through anything other than ``self`` in
 its declaring class ("foreign" accesses, e.g. ``eng.pending`` from an
 HTTP handler) are flagged everywhere in the scanned tree, unless the
@@ -200,7 +206,7 @@ class _ForeignChecker(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-def check(project: Project) -> List[Finding]:
+def check(project: Project, graph=None) -> List[Finding]:
     findings: List[Finding] = []
     classes: List[_ClassInfo] = []
     for f in project.files:
@@ -212,12 +218,27 @@ def check(project: Project) -> List[Finding]:
                 if info.guarded:
                     classes.append(info)
 
+    # call-graph-derived markers (transitive callees of annotated methods)
+    derived_eng: Set[str] = set()
+    derived_holds: Set[str] = set()
+    if graph is not None:
+        from .callgraph import propagate_all_callers, propagate_holds
+        derived_eng = propagate_all_callers(graph, "engine-thread-only")
+        derived_holds = propagate_holds(graph)
+
     # pass 1: in-class discipline
     for cls in classes:
         for item in cls.node.body:
             if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
-            markers = cls.file.markers_for_def(item)
+            markers = set(cls.file.markers_for_def(item))
+            if graph is not None:
+                fi = graph.func_for(item)
+                if fi is not None:
+                    if fi.fid in derived_eng:
+                        markers.add("engine-thread-only")
+                    if fi.fid in derived_holds:
+                        markers.add("holds=_lock")
             _MethodChecker(cls, item, markers, findings).visit(item)
 
     # pass 2: foreign accesses anywhere in the scanned tree

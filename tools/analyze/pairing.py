@@ -4,7 +4,11 @@ For each public top-level function in ``src/repro/kernels/*.py``
 (excluding ``ref.py`` and ``__init__.py``):
 
 * ``kernels/ref.py`` must define ``<kernel>_ref`` -- the pure-jnp oracle
-  the kernel is validated against, and
+  the kernel is validated against;
+* the pair must agree on their *non-default positional* parameter names
+  and order (the ``ops.py`` wrapper is the canonical signature when the
+  kernel is re-wrapped there) -- a drifted oracle signature means the
+  parity tests silently compare different argument layouts; and
 * at least one file under ``tests/`` must reference both names (the
   parity test that actually exercises the pair).
 
@@ -15,7 +19,7 @@ from __future__ import annotations
 
 import ast
 import re
-from typing import Dict, List, Set
+from typing import Dict, List, Optional
 
 from .core import Finding, Project
 
@@ -27,10 +31,20 @@ def _public_defs(tree: ast.Module) -> List[ast.FunctionDef]:
             if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")]
 
 
-def check(project: Project) -> List[Finding]:
+def _required_positional(fn: ast.FunctionDef) -> List[str]:
+    """Positional parameter names without defaults, in order."""
+    a = fn.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    n_default = len(a.defaults)
+    return pos[:len(pos) - n_default] if n_default else pos
+
+
+def check(project: Project, graph=None) -> List[Finding]:
     findings: List[Finding] = []
     kernels: Dict[str, tuple] = {}      # name -> (path, lineno), first wins
-    ref_names: Set[str] = set()
+    sig_defs: Dict[str, ast.FunctionDef] = {}   # canonical signature source
+    ops_defs: Dict[str, ast.FunctionDef] = {}
+    ref_defs: Dict[str, ast.FunctionDef] = {}
     kernels_dir_seen = False
     for f in project.files:
         if f.tree is None or "/kernels/" not in f.path:
@@ -40,22 +54,40 @@ def check(project: Project) -> List[Finding]:
         if base == "__init__.py":
             continue
         if base == "ref.py":
-            ref_names = {n.name for n in _public_defs(f.tree)}
+            ref_defs = {n.name: n for n in _public_defs(f.tree)}
             continue
         for fn in _public_defs(f.tree):
             kernels.setdefault(fn.name, (f.path, fn.lineno))
+            sig_defs.setdefault(fn.name, fn)
+            if base == "ops.py":
+                ops_defs[fn.name] = fn
     if not kernels_dir_seen:
         return findings
 
     for name, (path, lineno) in sorted(kernels.items()):
         oracle = f"{name}_ref"
-        if oracle not in ref_names:
+        ref_fn = ref_defs.get(oracle)
+        if ref_fn is None:
             findings.append(Finding(
                 rule=RULE_ID, path=path, line=lineno, col=0,
                 message=(f"public kernel `{name}` has no `{oracle}` oracle "
                          f"in kernels/ref.py"),
                 symbol=f"kernels.{name}.oracle"))
-            continue  # without the oracle, the test check is moot
+            continue  # without the oracle, the other checks are moot
+        # signature parity: the ops.py wrapper is canonical when present
+        canon: Optional[ast.FunctionDef] = ops_defs.get(name,
+                                                        sig_defs.get(name))
+        if canon is not None:
+            want = _required_positional(canon)
+            got = _required_positional(ref_fn)
+            if want != got:
+                findings.append(Finding(
+                    rule=RULE_ID, path=path, line=lineno, col=0,
+                    message=(f"`{oracle}` positional signature "
+                             f"({', '.join(got)}) does not match kernel "
+                             f"`{name}` ({', '.join(want)}); the parity "
+                             f"test compares different argument layouts"),
+                    symbol=f"kernels.{name}.signature-parity"))
         pair_re = None
         for test_path, text in project.tests:
             if re.search(rf"\b{re.escape(name)}\b", text) and \

@@ -1,0 +1,373 @@
+"""RL007: Pallas kernel geometry cross-checks.
+
+For every ``pl.pallas_call`` in ``src/repro/kernels/*.py`` (either with
+direct ``grid=``/``in_specs=``/``out_specs=``/``scratch_shapes=``
+keywords, or through a local ``pltpu.PrefetchScalarGridSpec`` bound to
+``grid_spec=``):
+
+* **index-map arity** -- every resolvable BlockSpec index map (lambda or
+  local ``def``) must take ``len(grid) + num_scalar_prefetch`` args;
+* **kernel signature** -- the kernel body's positional parameter count
+  must equal ``num_scalar_prefetch + len(in_specs) + len(out_specs) +
+  len(scratch_shapes)`` (keyword-only params bound via
+  ``functools.partial`` don't count);
+* **scratch dtypes** -- every ``pltpu.VMEM(shape, dtype)`` scratch entry
+  must carry an explicit dotted dtype (``jnp.float32``), not a bare
+  name or a positional omission;
+* **prefetch guards** -- if an index map subscripts a scalar-prefetch
+  operand (a block table lookup), the kernel body must contain a
+  ``pl.when(...)`` guard (call or decorator form) over a value read from
+  the corresponding prefetch ref -- the sentinel-block (-1) discipline.
+
+Anything unresolvable (dynamic grids, kernels built outside the module)
+is skipped silently: this rule only reports what it can prove.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, Project, SourceFile, attr_root, dotted_name
+
+RULE_ID = "RL007"
+
+_SKIP_BASES = {"ref.py", "__init__.py"}
+
+
+class _KernelsModule:
+    def __init__(self, file: SourceFile):
+        self.file = file
+        self.pl: Set[str] = set()      # pallas aliases
+        self.pltpu: Set[str] = set()   # pallas tpu aliases
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        assert file.tree is not None
+        for node in file.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    if mod == "jax.experimental" and alias.name == "pallas":
+                        self.pl.add(bound)
+                    elif mod == "jax.experimental.pallas" and \
+                            alias.name == "tpu":
+                        self.pltpu.add(bound)
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "jax.experimental.pallas":
+                        self.pl.add(alias.asname or "jax")
+                    elif alias.name == "jax.experimental.pallas.tpu":
+                        self.pltpu.add(alias.asname or "jax")
+
+
+class _Geometry:
+    """One resolved pallas_call site."""
+
+    def __init__(self) -> None:
+        self.kernel: Optional[ast.FunctionDef] = None
+        self.kernel_name: str = "<kernel>"
+        self.num_prefetch: int = 0
+        self.grid_len: Optional[int] = None
+        self.in_specs: List[ast.Call] = []
+        self.out_specs: List[ast.Call] = []
+        self.scratch: List[ast.AST] = []
+        self.has_scratch_kw = False
+        self.call: Optional[ast.Call] = None
+
+
+def _local_assigns(fn: ast.FunctionDef) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name):
+            out.setdefault(sub.targets[0].id, sub.value)
+    return out
+
+
+def _local_defs(fn: ast.FunctionDef) -> Dict[str, ast.FunctionDef]:
+    return {sub.name: sub for sub in ast.walk(fn)
+            if isinstance(sub, ast.FunctionDef) and sub is not fn}
+
+
+def _deref(expr: ast.AST, assigns: Dict[str, ast.AST]) -> ast.AST:
+    seen = 0
+    while isinstance(expr, ast.Name) and expr.id in assigns and seen < 4:
+        expr = assigns[expr.id]
+        seen += 1
+    return expr
+
+
+def _spec_list(expr: ast.AST, assigns: Dict[str, ast.AST],
+               pl: Set[str]) -> Optional[List[ast.Call]]:
+    """BlockSpec calls in an in_specs/out_specs expression; None if opaque."""
+    expr = _deref(expr, assigns)
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        elts = expr.elts
+    else:
+        elts = [expr]
+    out = []
+    for e in elts:
+        e = _deref(e, assigns)
+        if isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute) \
+                and e.func.attr == "BlockSpec" and attr_root(e.func) in pl:
+            out.append(e)
+        else:
+            return None
+    return out
+
+
+def _index_map_arity(spec: ast.Call, assigns: Dict[str, ast.AST],
+                     defs: Dict[str, ast.FunctionDef],
+                     ) -> Optional[Tuple[ast.AST, int, List[str]]]:
+    """(node, arity, param names) of a BlockSpec's index map, if present."""
+    im: Optional[ast.AST] = None
+    if len(spec.args) >= 2:
+        im = spec.args[1]
+    for kw in spec.keywords:
+        if kw.arg == "index_map":
+            im = kw.value
+    if im is None:
+        return None
+    if isinstance(im, ast.Name) and im.id in defs:
+        fn = defs[im.id]
+        params = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+        return fn, len(params), params
+    im = _deref(im, assigns)
+    if isinstance(im, ast.Lambda):
+        params = [p.arg for p in im.args.posonlyargs + im.args.args]
+        return im, len(params), params
+    if isinstance(im, ast.Name) and im.id in defs:
+        fn = defs[im.id]
+        params = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+        return fn, len(params), params
+    return None
+
+
+def _resolve_kernel(expr: ast.AST, assigns: Dict[str, ast.AST],
+                    module: _KernelsModule,
+                    ) -> Tuple[Optional[ast.FunctionDef], str]:
+    expr = _deref(expr, assigns)
+    if isinstance(expr, ast.Call):
+        name = dotted_name(expr.func)
+        if name in ("functools.partial", "partial") and expr.args:
+            expr = _deref(expr.args[0], assigns)
+    if isinstance(expr, ast.Name):
+        fn = module.defs.get(expr.id)
+        return fn, expr.id
+    return None, "<kernel>"
+
+
+def _const_int(expr: ast.AST) -> Optional[int]:
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return expr.value
+    return None
+
+
+def _grid_len(expr: ast.AST, assigns: Dict[str, ast.AST]) -> Optional[int]:
+    expr = _deref(expr, assigns)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _geometry(call: ast.Call, wrapper: ast.FunctionDef,
+              module: _KernelsModule) -> Optional[_Geometry]:
+    assigns = _local_assigns(wrapper)
+    g = _Geometry()
+    g.call = call
+    if call.args:
+        g.kernel, g.kernel_name = _resolve_kernel(call.args[0], assigns,
+                                                  module)
+    kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    spec_src = kwargs
+    if "grid_spec" in kwargs:
+        gs = _deref(kwargs["grid_spec"], assigns)
+        if not (isinstance(gs, ast.Call)
+                and isinstance(gs.func, ast.Attribute)
+                and gs.func.attr == "PrefetchScalarGridSpec"
+                and attr_root(gs.func) in module.pltpu):
+            return None
+        spec_src = {kw.arg: kw.value for kw in gs.keywords if kw.arg}
+        npf = spec_src.get("num_scalar_prefetch")
+        g.num_prefetch = _const_int(npf) if npf is not None else 0
+        if g.num_prefetch is None:
+            return None
+    if "grid" in spec_src:
+        g.grid_len = _grid_len(spec_src["grid"], assigns)
+    for key, dest in (("in_specs", "in_specs"), ("out_specs", "out_specs")):
+        if key in spec_src:
+            specs = _spec_list(spec_src[key], assigns, module.pl)
+            if specs is None:
+                return None
+            setattr(g, dest, specs)
+    if "scratch_shapes" in spec_src:
+        g.has_scratch_kw = True
+        sc = _deref(spec_src["scratch_shapes"], assigns)
+        if isinstance(sc, (ast.List, ast.Tuple)):
+            g.scratch = list(sc.elts)
+        else:
+            return None
+    return g
+
+
+def _prefetch_guard_ok(g: _Geometry, assigns: Dict[str, ast.AST],
+                       defs: Dict[str, ast.FunctionDef],
+                       pl: Set[str]) -> Optional[bool]:
+    """None = check not applicable; True/False = guard present/missing."""
+    if g.num_prefetch <= 0 or g.kernel is None or g.grid_len is None:
+        return None
+    # does any index map subscript a prefetch operand?
+    uses_prefetch = False
+    for spec in g.in_specs + g.out_specs:
+        im = _index_map_arity(spec, assigns, defs)
+        if im is None:
+            continue
+        node, _arity, params = im
+        pf_params = set(params[g.grid_len:])
+        if not pf_params:
+            continue
+        body = node.body if isinstance(node, ast.Lambda) else node
+        for sub in ast.walk(body):
+            if isinstance(sub, ast.Subscript) and \
+                    isinstance(sub.value, ast.Name) and \
+                    sub.value.id in pf_params:
+                uses_prefetch = True
+    if not uses_prefetch:
+        return None
+    # prefetch refs are the kernel's first num_prefetch positional params
+    ka = g.kernel.args
+    kparams = [p.arg for p in ka.posonlyargs + ka.args]
+    pf_refs = set(kparams[:g.num_prefetch])
+    if not pf_refs:
+        return False
+    # names read from a prefetch ref inside the kernel body
+    derived: Set[str] = set(pf_refs)
+    for sub in ast.walk(g.kernel):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name):
+            for inner in ast.walk(sub.value):
+                if isinstance(inner, ast.Subscript) and \
+                        isinstance(inner.value, ast.Name) and \
+                        inner.value.id in derived:
+                    derived.add(sub.targets[0].id)
+    # a pl.when(...) whose test mentions a derived name
+    whens: List[ast.Call] = []
+    for sub in ast.walk(g.kernel):
+        if isinstance(sub, ast.Call) and \
+                isinstance(sub.func, ast.Attribute) and \
+                sub.func.attr == "when" and attr_root(sub.func) in pl:
+            whens.append(sub)
+        elif isinstance(sub, ast.FunctionDef):
+            for dec in sub.decorator_list:
+                if isinstance(dec, ast.Call) and \
+                        isinstance(dec.func, ast.Attribute) and \
+                        dec.func.attr == "when" and \
+                        attr_root(dec.func) in pl:
+                    whens.append(dec)
+    for w in whens:
+        for arg in w.args:
+            for inner in ast.walk(arg):
+                if isinstance(inner, ast.Name) and inner.id in derived:
+                    return True
+    return False
+
+
+def check(project: Project, graph=None) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+
+    def emit(f: Finding) -> None:
+        if f.fingerprint not in seen:
+            seen.add(f.fingerprint)
+            findings.append(f)
+
+    for f in project.files:
+        if f.tree is None or "/kernels/" not in f.path:
+            continue
+        if f.path.rsplit("/", 1)[-1] in _SKIP_BASES:
+            continue
+        module = _KernelsModule(f)
+        if not module.pl:
+            continue
+        for wrapper in module.defs.values():
+            assigns = _local_assigns(wrapper)
+            defs = {**module.defs, **_local_defs(wrapper)}
+            for sub in ast.walk(wrapper):
+                if not (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "pallas_call"
+                        and attr_root(sub.func) in module.pl):
+                    continue
+                g = _geometry(sub, wrapper, module)
+                if g is None:
+                    continue
+                _check_site(f, g, assigns, defs, module, emit)
+    return findings
+
+
+def _check_site(f: SourceFile, g: _Geometry, assigns, defs,
+                module: _KernelsModule, emit) -> None:
+    kname = g.kernel_name
+    # (a) index-map arity vs grid + prefetch
+    if g.grid_len is not None:
+        expected = g.grid_len + g.num_prefetch
+        for spec in g.in_specs + g.out_specs:
+            im = _index_map_arity(spec, assigns, defs)
+            if im is None:
+                continue
+            node, arity, _params = im
+            if arity != expected:
+                emit(Finding(
+                    rule=RULE_ID, path=f.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"BlockSpec index map for `{kname}` takes "
+                             f"{arity} args, expected {expected} (grid "
+                             f"{g.grid_len} + {g.num_prefetch} "
+                             f"scalar-prefetch)"),
+                    symbol=f"kernels.{kname}.index-map-arity.{arity}"))
+    # (b) kernel positional signature
+    if g.kernel is not None and g.in_specs and g.out_specs:
+        ka = g.kernel.args
+        actual = len(ka.posonlyargs + ka.args)
+        expected = (g.num_prefetch + len(g.in_specs) + len(g.out_specs)
+                    + len(g.scratch))
+        if actual != expected:
+            emit(Finding(
+                rule=RULE_ID, path=f.path, line=g.kernel.lineno, col=0,
+                message=(f"kernel `{kname}` takes {actual} positional "
+                         f"refs, expected {expected} "
+                         f"({g.num_prefetch} prefetch + "
+                         f"{len(g.in_specs)} in + {len(g.out_specs)} out "
+                         f"+ {len(g.scratch)} scratch)"),
+                symbol=f"kernels.{kname}.signature"))
+    # (c) scratch dtype explicitness
+    for entry in g.scratch:
+        if isinstance(entry, ast.Call) and \
+                isinstance(entry.func, ast.Attribute) and \
+                entry.func.attr == "VMEM" and \
+                attr_root(entry.func) in module.pltpu:
+            dt: Optional[ast.AST] = entry.args[1] if len(entry.args) >= 2 \
+                else None
+            for kw in entry.keywords:
+                if kw.arg == "dtype":
+                    dt = kw.value
+            if not isinstance(dt, ast.Attribute):
+                emit(Finding(
+                    rule=RULE_ID, path=f.path, line=entry.lineno,
+                    col=entry.col_offset,
+                    message=(f"scratch buffer of `{kname}` lacks an "
+                             f"explicit dotted dtype (e.g. `jnp.float32`)"),
+                    symbol=f"kernels.{kname}.scratch-dtype"))
+    # (d) pl.when guard over prefetched-table loads
+    ok = _prefetch_guard_ok(g, assigns, defs, module.pl)
+    if ok is False:
+        emit(Finding(
+            rule=RULE_ID, path=f.path,
+            line=g.kernel.lineno if g.kernel else
+            (g.call.lineno if g.call else 1),
+            col=0,
+            message=(f"kernel `{kname}` indexes a scalar-prefetch table in "
+                     f"an index map but has no `pl.when` guard on the "
+                     f"prefetched value (sentinel blocks would be read)"),
+            symbol=f"kernels.{kname}.prefetch-guard"))

@@ -421,8 +421,9 @@ class _ModuleCtx:
                         self.np_aliases.add(alias.asname or alias.name)
 
 
-def check(project: Project) -> List[Finding]:
+def check(project: Project, graph=None) -> List[Finding]:
     findings: List[Finding] = []
+    traced_fns: List[Tuple[SourceFile, ast.FunctionDef, str]] = []
     for f in project.files:
         if f.tree is None:
             continue
@@ -476,5 +477,69 @@ def check(project: Project) -> List[Finding]:
             an = _FnAnalyzer(m_final, m.functions[name], final_static,
                              entry_of.get(name, name))
             an.run()
+            traced_fns.append((f, m.functions[name],
+                               entry_of.get(name, name)))
         findings.extend(m_final.findings)
+    if graph is not None:
+        findings.extend(_cross_module_syncs(graph, traced_fns))
     return findings
+
+
+def _cross_module_syncs(graph, traced_fns) -> List[Finding]:
+    """Chase traced functions' call edges into *other* files.
+
+    Same-file helpers are already in the worklist closure above; a
+    traced function calling a plain (non-jit) top-level helper in
+    another module drags that helper into the trace too.  Full static
+    propagation across modules is out of scope, so the transitive pass
+    is sync-only: explicit device->host syncs, ``print``, and
+    ``global``/``nonlocal`` are flagged wherever they appear.
+    """
+    findings: List[Finding] = []
+    analyzed = {(sf.path, fn.name): entry for sf, fn, entry in traced_fns}
+    visited: Set[Tuple[str, str]] = set()
+    work = []
+    for sf, fn, entry in traced_fns:
+        fi = graph.func_for(fn)
+        if fi is not None:
+            work.append((fi, entry))
+    while work:
+        fi, entry = work.pop()
+        for site in fi.calls:
+            callee = site.callee
+            key = (callee.path, callee.name)
+            if callee.path == fi.path or callee.is_jit or \
+                    callee.cls is not None or key in analyzed or \
+                    key in visited:
+                continue
+            visited.add(key)
+            findings.extend(_sync_only_scan(callee, entry))
+            work.append((callee, entry))
+    return findings
+
+
+def _sync_only_scan(fi, entry: str) -> List[Finding]:
+    out: List[Finding] = []
+
+    def flag(node: ast.AST, what: str) -> None:
+        out.append(Finding(
+            rule=RULE_ID, path=fi.path,
+            line=node.lineno, col=node.col_offset,
+            message=(f"{what} inside `{fi.name}`, traced transitively "
+                     f"from jit entry `{entry}` in another module"),
+            symbol=f"{fi.name}.transitive.{what}"))
+
+    for sub in ast.walk(fi.node):
+        if isinstance(sub, ast.Call):
+            func = sub.func
+            if isinstance(func, ast.Attribute):
+                if func.attr in _SYNC_METHODS:
+                    flag(sub, f"host sync `.{func.attr}()`")
+                elif dotted_name(func) == "jax.device_get":
+                    flag(sub, "host sync `jax.device_get`")
+            elif isinstance(func, ast.Name) and func.id == "print":
+                flag(sub, "`print` side effect")
+        elif isinstance(sub, (ast.Global, ast.Nonlocal)):
+            kind = "global" if isinstance(sub, ast.Global) else "nonlocal"
+            flag(sub, f"`{kind}` rebinding")
+    return out

@@ -1,0 +1,434 @@
+"""RL005: path-sensitive alloc/release discipline for block resources.
+
+Acquisitions tracked:
+
+* ``x = <pool>.alloc(n)``      -- fresh blocks (handle keyed ``x``);
+* ``<pool>.share(blocks)``     -- a refcount increment (handle keyed by
+  the argument's root names);
+* ``x = self._entries.pop(k)`` -- removing a ref-holding ``PrefixIndex``
+  entry (its blocks are now owned by the popped value).
+
+``<pool>`` matches by resolution first -- a call-graph edge landing in
+``SharedBlockPool`` / ``BlockAllocator`` -- with a receiver-name
+fallback (``pool``/``allocator``/``_pool``/``_allocator``) for fields
+the type inference cannot pin.
+
+A handle dies when it is *released* (``.release(x)`` / ``.free(x)``),
+*transferred* (stored into ``self.*`` state, appended to a self-rooted
+container, returned, passed to a callee marked ``# repro-lint:
+transfers-ownership``, or covered by a statement-level marker), or
+*refined away* (the ``x is None`` branch of a failed allocation).
+Aliasing (``blocks_j = hits + alloc``, ``e = _Entry(..., blocks, ...)``)
+is handled by flow-insensitive *carrier sets*: releasing or
+transferring a value kills every handle whose root names it carries.
+
+A finding is one handle that can escape on a raising path (or a normal
+exit) while still live.  Exception edges carry the state *before* the
+raising statement -- except for release calls, which count as released
+on their own raise edge.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from . import callgraph as callgraph_mod
+from .cfg import Flow
+from .core import _LINT_RE, Finding, Project, attr_root, dotted_name
+
+RULE_ID = "RL005"
+
+POOL_CLASSES = {"SharedBlockPool", "BlockAllocator"}
+ACQUIRE_METHODS = {"alloc", "share"}
+RELEASE_METHODS = {"release", "free"}
+RECV_NAME_FALLBACK = {"pool", "allocator", "_pool", "_allocator"}
+REF_CONTAINERS = {"_entries"}
+TRANSFER_MARK = "transfers-ownership"
+
+# calls that cannot raise in practice (so a live handle across them is
+# not an escape path) -- deliberately excludes `.pop` and `.index`
+SAFE_FUNCS = {"len", "list", "tuple", "dict", "set", "min", "max", "sum",
+              "sorted", "zip", "enumerate", "range", "isinstance", "id",
+              "str", "repr", "bool", "abs", "int", "float", "frozenset"}
+SAFE_METHODS = {"get", "append", "extend", "copy", "items", "keys",
+                "values", "add", "update", "discard", "clear",
+                "setdefault", "insert"}
+# safe self-rooted container mutators that adopt their argument
+ADOPT_METHODS = {"append", "extend", "add", "insert", "setdefault",
+                 "update"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Handle:
+    names: FrozenSet[str]
+    desc: str          # e.g. "self.pool.share"
+    line: int
+    col: int
+
+
+@dataclasses.dataclass(frozen=True)
+class State:
+    """Live handles plus path predicates over stable ``self.X`` tests.
+
+    ``facts`` remembers which branch of an attribute-truthiness test
+    (``if self.paged:``) this path took, so a later test of the same
+    attribute prunes the contradictory branch -- the pattern behind
+    "acquire under ``if self.paged``, release in a ``finally`` under the
+    same test"."""
+    handles: FrozenSet[Handle] = frozenset()
+    facts: FrozenSet[Tuple[str, bool]] = frozenset()
+
+
+def _roots(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name)} - {"self"}
+
+
+def _self_rooted(node: ast.AST) -> bool:
+    """``self.x``, ``self.x[i]``, ``self.x[i].y`` ... rooted at ``self``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+def _call_unsafe(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id not in SAFE_FUNCS
+    if isinstance(f, ast.Attribute):
+        return f.attr not in SAFE_METHODS
+    return True
+
+
+def _recv_tail(func: ast.Attribute) -> Optional[str]:
+    recv = func.value
+    if isinstance(recv, ast.Attribute):
+        return recv.attr
+    if isinstance(recv, ast.Name):
+        return recv.id
+    return None
+
+
+def _carriers(fn: ast.FunctionDef) -> Dict[str, Set[str]]:
+    """Flow-insensitive alias map: name -> root names it may carry."""
+    out: Dict[str, Set[str]] = {}
+
+    def feed(target: ast.AST, value: ast.AST) -> None:
+        vroots = _roots(value)
+        for t in ast.walk(target):
+            if isinstance(t, ast.Name):
+                out.setdefault(t.id, set()).update(vroots - {t.id})
+
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                feed(t, sub.value)
+        elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+            if sub.value is not None:
+                feed(sub.target, sub.value)
+        elif isinstance(sub, ast.For):
+            feed(sub.target, sub.iter)
+        elif isinstance(sub, ast.withitem) and sub.optional_vars is not None:
+            feed(sub.optional_vars, sub.context_expr)
+        elif isinstance(sub, ast.comprehension):
+            feed(sub.target, sub.iter)
+    return out
+
+
+class _Domain:
+    """cfg.Flow domain over :class:`State` (live handles + path facts)."""
+
+    def __init__(self, fi: "callgraph_mod.FuncInfo",
+                 graph: "callgraph_mod.CallGraph"):
+        self.fi = fi
+        self.graph = graph
+        self.file = fi.file
+        self.carriers = _carriers(fi.node)
+
+    # -- cfg protocol --------------------------------------------------------
+    def initial(self) -> State:
+        return State()
+
+    def key(self, state: State):
+        return state
+
+    def collapse(self, states: List[State]):
+        return [State(handles=frozenset().union(
+            *(s.handles for s in states)))]
+
+    def may_raise_expr(self, expr: Optional[ast.AST]) -> bool:
+        if expr is None:
+            return False
+        return any(isinstance(n, ast.Call) and _call_unsafe(n)
+                   for n in ast.walk(expr))
+
+    def refine(self, test: ast.AST, state: State,
+               branch: bool) -> Optional[State]:
+        fact = self._attr_test(test)
+        if fact is not None:
+            fact_key, positive = fact
+            want = branch == positive
+            if (fact_key, not want) in state.facts:
+                return None                    # contradictory path: prune
+            return State(handles=state.handles,
+                         facts=state.facts | {(fact_key, want)})
+        name, none_branch = self._none_test(test)
+        if name is not None and branch == none_branch:
+            return State(handles=frozenset(
+                h for h in state.handles if name not in h.names),
+                facts=state.facts)
+        return state
+
+    def at_return(self, stmt: ast.Return, state: State) -> State:
+        if stmt.value is None:
+            return state
+        return self._kill(state, _roots(stmt.value))
+
+    def transfer(self, stmt: ast.stmt, state: State,
+                 ) -> Tuple[State, Optional[State]]:
+        calls = [n for n in ast.walk(stmt) if isinstance(n, ast.Call)]
+        s = state
+        # 1. releases and *explicit* transfers count even on the statement's
+        #    own raise edge: a release frees first, and a marked transfer is
+        #    a human assertion that the callee owns the handle from the call
+        for c in calls:
+            if self._is_pool_method(c, RELEASE_METHODS):
+                roots: Set[str] = set()
+                for a in c.args:
+                    roots |= _roots(a)
+                s = self._kill(s, roots)
+        if self._stmt_marked_transfer(stmt):
+            s = self._kill(s, _roots(stmt))
+        for c in calls:
+            s = self._call_transfers(c, s)
+        raise_state = s if any(_call_unsafe(c) for c in calls) else None
+        # 2. a store into self.* only lands if its RHS succeeded, so it
+        #    transfers on the fallthrough edge only
+        s = self._assign_transfers(stmt, s)
+        # 3. acquisitions
+        for c in calls:
+            h = self._acquire(stmt, c)
+            if h is not None:
+                s = State(handles=s.handles | {h}, facts=s.facts)
+        return s, raise_state
+
+    # -- semantics -----------------------------------------------------------
+    def _closure(self, roots: Set[str]) -> Set[str]:
+        out, work = set(roots), list(roots)
+        while work:
+            n = work.pop()
+            for carried in self.carriers.get(n, ()):
+                if carried not in out:
+                    out.add(carried)
+                    work.append(carried)
+        return out
+
+    def _kill(self, state: State, roots: Set[str]) -> State:
+        if not roots:
+            return state
+        cl = self._closure(roots)
+        return State(handles=frozenset(
+            h for h in state.handles if not (h.names & cl)),
+            facts=state.facts)
+
+    @staticmethod
+    def _attr_test(test: ast.AST) -> Optional[Tuple[str, bool]]:
+        """(dotted self-attribute, polarity) for ``self.X`` truthiness."""
+        positive = True
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            test = test.operand
+            positive = False
+        if isinstance(test, ast.Attribute) and _self_rooted(test) \
+                and not any(isinstance(n, ast.Subscript)
+                            for n in ast.walk(test)):
+            name = dotted_name(test)
+            if name is not None:
+                return name, positive
+        return None
+
+    def _is_pool_method(self, call: ast.Call, methods: Set[str]) -> bool:
+        f = call.func
+        if not isinstance(f, ast.Attribute) or f.attr not in methods:
+            return False
+        site = self.graph.call_by_node.get(id(call))
+        if site is not None and site.callee.cls is not None:
+            return site.callee.cls in POOL_CLASSES
+        return _recv_tail(f) in RECV_NAME_FALLBACK
+
+    def _is_entry_pop(self, call: ast.Call) -> bool:
+        f = call.func
+        return (isinstance(f, ast.Attribute) and f.attr == "pop"
+                and isinstance(f.value, ast.Attribute)
+                and f.value.attr in REF_CONTAINERS
+                and attr_root(f.value) == "self")
+
+    def _acquire(self, stmt: ast.stmt, call: ast.Call) -> Optional[Handle]:
+        f = call.func
+        if not isinstance(f, ast.Attribute):
+            return None
+        desc = dotted_name(f) or f.attr
+        if f.attr == "share" and self._is_pool_method(call, {"share"}):
+            roots: Set[str] = set()
+            for a in call.args:
+                roots |= _roots(a)
+            if not roots:
+                return None          # self-rooted: ref already held by state
+            return Handle(names=frozenset(roots), desc=desc,
+                          line=call.lineno, col=call.col_offset)
+        target = self._single_name_target(stmt, call)
+        if target is None:
+            return None
+        if f.attr == "alloc" and self._is_pool_method(call, {"alloc"}):
+            return Handle(names=frozenset({target}), desc=desc,
+                          line=call.lineno, col=call.col_offset)
+        if self._is_entry_pop(call):
+            return Handle(names=frozenset({target}), desc=desc,
+                          line=call.lineno, col=call.col_offset)
+        return None
+
+    @staticmethod
+    def _single_name_target(stmt: ast.stmt,
+                            call: ast.Call) -> Optional[str]:
+        """``x = <call>`` -> "x"; stores into self.* are direct transfers."""
+        if isinstance(stmt, ast.Assign) and stmt.value is call \
+                and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            return stmt.targets[0].id
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is call \
+                and isinstance(stmt.target, ast.Name):
+            return stmt.target.id
+        return None
+
+    def _assign_transfers(self, stmt: ast.stmt, state: State) -> State:
+        """Storing into self-rooted state hands the blocks to the object."""
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)) \
+                and stmt.value is not None:
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)) \
+                        and _self_rooted(t):
+                    state = self._invalidate_fact(t, state)
+                    state = self._kill(state, _roots(stmt.value))
+        return state
+
+    @staticmethod
+    def _invalidate_fact(target: ast.AST, state: State) -> State:
+        """Reassigning ``self.X`` voids path facts recorded about it."""
+        if isinstance(target, ast.Attribute):
+            name = dotted_name(target)
+            if name is not None and any(k == name for k, _ in state.facts):
+                return State(handles=state.handles,
+                             facts=frozenset((k, v) for k, v in state.facts
+                                             if k != name))
+        return state
+
+    def _call_transfers(self, call: ast.Call, state: State) -> State:
+        f = call.func
+        if not isinstance(f, ast.Attribute):
+            site = self.graph.call_by_node.get(id(call))
+            if site is not None and TRANSFER_MARK in site.callee.markers:
+                roots: Set[str] = set()
+                for a in call.args:
+                    roots |= _roots(a)
+                return self._kill(state, roots)
+            return state
+        # adopting mutation of self-rooted containers: self.x[s].append(b)
+        if f.attr in ADOPT_METHODS and _self_rooted(f.value):
+            roots = set()
+            for a in call.args:
+                roots |= _roots(a)
+            return self._kill(state, roots)
+        site = self.graph.call_by_node.get(id(call))
+        if site is not None and TRANSFER_MARK in site.callee.markers:
+            roots = set()
+            for a in call.args:
+                roots |= _roots(a)
+            return self._kill(state, roots)
+        return state
+
+    def _stmt_marked_transfer(self, stmt: ast.stmt) -> bool:
+        end = getattr(stmt, "end_lineno", stmt.lineno) or stmt.lineno
+        for ln in range(stmt.lineno, end + 1):
+            c = self.file.comments.get(ln)
+            if not c:
+                continue
+            m = _LINT_RE.search(c)
+            if m and TRANSFER_MARK in m.group(1).split():
+                return True
+        return False
+
+    @staticmethod
+    def _none_test(test: ast.AST) -> Tuple[Optional[str], Optional[bool]]:
+        """(name, branch-on-which-name-is-dead) for recognizable tests.
+
+        ``x is None`` -> (x, True): the handle is dead on the true branch
+        (nothing was allocated).  ``x is not None`` -> (x, False).  Bare
+        ``x`` truthiness -> (x, False); ``not x`` -> (x, True).
+        """
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.left, ast.Name) \
+                and isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value is None:
+            if isinstance(test.ops[0], ast.Is):
+                return test.left.id, True
+            if isinstance(test.ops[0], ast.IsNot):
+                return test.left.id, False
+        if isinstance(test, ast.Name):
+            return test.id, False
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not) \
+                and isinstance(test.operand, ast.Name):
+            return test.operand.id, True
+        return None, None
+
+
+def _has_acquire(fi: "callgraph_mod.FuncInfo",
+                 graph: "callgraph_mod.CallGraph") -> bool:
+    dom = None
+    for n in ast.walk(fi.node):
+        if not isinstance(n, ast.Call) or \
+                not isinstance(n.func, ast.Attribute):
+            continue
+        if n.func.attr in ACQUIRE_METHODS or n.func.attr == "pop":
+            if dom is None:
+                dom = _Domain(fi, graph)
+            if dom._is_pool_method(n, ACQUIRE_METHODS) or \
+                    dom._is_entry_pop(n):
+                return True
+    return False
+
+
+def check(project: Project, graph=None) -> List[Finding]:
+    if graph is None:
+        graph = callgraph_mod.build(project)
+    findings: List[Finding] = []
+    for fi in graph.functions:
+        if TRANSFER_MARK in fi.markers:
+            continue                 # whole function hands its blocks off
+        if not _has_acquire(fi, graph):
+            continue
+        dom = _Domain(fi, graph)
+        sinks = Flow(dom).run(fi.node.body)
+        leaks: Dict[Handle, str] = {}
+        for (_stmt, s) in sinks.raised:
+            for h in s.handles:
+                leaks.setdefault(h, "raise")
+        for s in sinks.returned:
+            for h in s.handles:
+                leaks.setdefault(h, "exit")
+        for h in sorted(leaks, key=lambda h: (h.line, h.col, h.desc)):
+            names = ",".join(sorted(h.names))
+            if leaks[h] == "raise":
+                msg = (f"resource `{names}` acquired via `{h.desc}` in "
+                       f"`{fi.qualname}` may escape on a raising path "
+                       f"without release/transfer/`finally` protection")
+            else:
+                msg = (f"resource `{names}` acquired via `{h.desc}` in "
+                       f"`{fi.qualname}` is not released or transferred "
+                       f"on every exit path")
+            findings.append(Finding(
+                rule=RULE_ID, path=fi.path, line=h.line, col=h.col,
+                message=msg,
+                symbol=f"{fi.qualname}.leak.{names}"))
+    return findings

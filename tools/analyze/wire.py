@@ -307,7 +307,7 @@ def _v1_route(test: ast.AST) -> Optional[str]:
     return None
 
 
-def check(project: Project) -> List[Finding]:
+def check(project: Project, graph=None) -> List[Finding]:
     findings: List[Finding] = []
     errors_f = project.find_suffix(_ERRORS_SUFFIX)
     if errors_f is not None and errors_f.tree is not None:
