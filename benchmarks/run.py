@@ -30,6 +30,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     HTTP front-end (req/s + latency tails)
   http_keepalive_*                  HTTP/1.1 keep-alive connection reuse vs
                                     a fresh socket per call (req/s delta)
+  router_Nx_p50 / router_2x_speedup horizontal serving: the prefix-affinity
+                                    router over 1/2/4 engine replicas under
+                                    mixed generate/futures load (req/s +
+                                    latency tails; 2x row asserts >= 1.5x
+                                    the 1-replica req/s)
   roofline_*                        derived = dominant roofline term (reads
                                     experiments/dryrun; skipped when absent)
 
@@ -537,6 +542,107 @@ def bench_http_keepalive():
          f"keep-alive vs socket-per-call")
 
 
+def bench_router():
+    """Horizontal serving: mixed generate/futures load through the
+    prefix-affinity router at 1/2/4 in-process engine replicas, equal
+    per-replica settings — req/s and p50/p95 end-to-end latency next to the
+    single-server `http` row.  The 2-replica row must clear 1.5x the
+    1-replica req/s: with small per-replica admission width the single
+    replica is queue-bound, and a second replica doubles the slot budget
+    while ticks stay overhead-dominated for the reduced model (jitted
+    compute also releases the GIL, so replicas overlap on multicore)."""
+    import threading
+
+    from repro.api import Client, FuturesRequest
+    from repro.api.client import EngineBackend
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.router import ReplicaSupervisor, RouterServer
+
+    cfg = get_config("delphi-2m", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_clients, per_client, max_new = 8, 3, 12
+
+    def make_backend(i):
+        # params shared across replicas: N replicas cost N KV pools, and
+        # the module-level jit cache means replica 2..n compile nothing
+        return EngineBackend.create(params, cfg, slots=2, max_context=64,
+                                    cache="paged", prefix_cache=True,
+                                    seed=i + 1)
+
+    def measure(n_replicas):
+        sup = ReplicaSupervisor.in_process(make_backend, n_replicas,
+                                           probe_interval=0.5)
+        router = RouterServer(sup, port=0).start()
+        try:
+            warm = Client.connect(router.address)     # compiles off-clock
+            warm.generate(tokens=[3, 4, 5], ages=[0., 1., 2.],
+                          max_new=max_new)
+            warm.backend.sample_futures(FuturesRequest(
+                tokens=[3, 4, 5], ages=[0., 1., 2.], n_futures=2,
+                max_new=6))
+            lat: list = []
+            failures: list = []
+            lock = threading.Lock()
+
+            def worker(i):
+                try:
+                    client = Client.connect(router.address)
+                    # per-worker histories: load spreads by free blocks,
+                    # repeats within a worker ride prefix affinity
+                    toks = [3 + i] * 20     # >= one full 16-token block:
+                    ages = [float(j)        # repeats ride prefix affinity
+                            for j in range(20)]
+                    for j in range(per_client):
+                        t0 = time.perf_counter()
+                        if j % 3 == 2:      # mixed load: 1/3 futures
+                            client.backend.sample_futures(FuturesRequest(
+                                tokens=toks, ages=ages, n_futures=2,
+                                max_new=6))
+                        else:
+                            client.generate(tokens=toks, ages=ages,
+                                            max_new=max_new)
+                        with lock:
+                            lat.append(time.perf_counter() - t0)
+                except Exception as e:      # noqa: BLE001 — after join
+                    with lock:
+                        failures.append(e)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(n_clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            sched = router.scheduler.stats()
+        finally:
+            router.stop()
+        if failures:
+            raise RuntimeError(
+                f"router benchmark ({n_replicas} replicas): "
+                f"{len(failures)} worker(s) failed: {failures[0]}")
+        times = np.asarray(lat)
+        return (len(lat) / wall, np.percentile(times, 50),
+                np.percentile(times, 95), sched["affinity_rate"])
+
+    rps = {}
+    for n in (1, 2, 4):
+        req_s, p50, p95, aff = measure(n)
+        rps[n] = req_s
+        _row(f"router_{n}x_p50", p50 * 1e6,
+             f"{req_s:.1f} req/s, p95 {p95 * 1e3:.0f} ms "
+             f"({n} replica(s) x 2 slots, {n_clients} clients, "
+             f"affinity {aff:.2f})")
+    speedup = rps[2] / max(rps[1], 1e-9)
+    _row("router_2x_speedup", 0.0,
+         f"{speedup:.2f}x req/s 2 replicas vs 1 (equal per-replica "
+         f"settings)")
+    assert speedup >= 1.5, \
+        f"2-replica router speedup {speedup:.2f}x < 1.5x over 1 replica"
+
+
 def bench_calibration():
     """Delphi-style evaluation: generated cohort vs held-out cohort stats."""
     from repro.configs import get_config
@@ -587,6 +693,7 @@ BENCHES = {
     "futures": bench_futures,
     "http": bench_http,
     "http_keepalive": bench_http_keepalive,
+    "router": bench_router,
     "calibration": bench_calibration,
     "roofline": bench_roofline,
 }

@@ -9,9 +9,10 @@ from repro.api.client import (ArtifactBackend, Client, EngineBackend,
                               InferenceBackend, LocalBackend)
 from repro.api.errors import (AgesLengthMismatchError, AgesRequiredError,
                               ApiError, EmptyTrajectoryError,
-                              ProtocolVersionError, RequestCancelledError,
-                              RequestTimeoutError, RngNotSerializableError,
-                              TooLongError, error_from_code, error_from_json)
+                              ProtocolVersionError, ReplicaUnavailableError,
+                              RequestCancelledError, RequestTimeoutError,
+                              RngNotSerializableError, TooLongError,
+                              error_from_code, error_from_json)
 from repro.api.remote import RemoteBackend
 from repro.api.schemas import (WIRE_PROTOCOL_VERSION, FuturesRequest,
                                FuturesResult, GenerateRequest, RiskItem,
@@ -26,5 +27,5 @@ __all__ = [
     "ApiError", "EmptyTrajectoryError", "TooLongError", "AgesRequiredError",
     "AgesLengthMismatchError", "RngNotSerializableError",
     "ProtocolVersionError", "RequestCancelledError", "RequestTimeoutError",
-    "error_from_code", "error_from_json",
+    "ReplicaUnavailableError", "error_from_code", "error_from_json",
 ]

@@ -23,7 +23,8 @@ __all__ = [
     "AgesLengthMismatchError", "RngNotSerializableError",
     "UnsupportedOverrideError", "InvalidRequestError", "ProtocolVersionError",
     "UnknownEndpointError", "RequestTimeoutError", "RequestCancelledError",
-    "InternalServerError", "error_from_code", "error_from_json",
+    "ReplicaUnavailableError", "InternalServerError", "error_from_code",
+    "error_from_json",
 ]
 
 
@@ -119,6 +120,18 @@ class RequestCancelledError(ApiError):
     streams signal this as a terminal ``cancelled`` frame."""
     code = "request_cancelled"
     http_status = 409
+
+
+class ReplicaUnavailableError(ApiError):
+    """The serving replica cannot be reached.  Raised client-side by
+    ``RemoteBackend`` when the server is unreachable at the transport level
+    (connect failure, connection dropped mid-response), and served by the
+    multi-replica router (``repro.serve.router``) when no healthy replica
+    remains to take the request — including a retried idempotent call whose
+    every candidate failed, and a pinned stream whose replica died
+    mid-flight (terminal SSE ``error`` frame carrying this code)."""
+    code = "replica_unavailable"
+    http_status = 503
 
 
 class InternalServerError(ApiError):

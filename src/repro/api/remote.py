@@ -37,7 +37,7 @@ from urllib.parse import urlsplit
 
 from repro.api.client import InferenceBackend
 from repro.api.errors import (InternalServerError, ProtocolVersionError,
-                              error_from_json)
+                              ReplicaUnavailableError, error_from_json)
 from repro.api.schemas import (WIRE_PROTOCOL_VERSION, FuturesRequest,
                                FuturesResult, GenerateRequest, RiskReport,
                                TrajectoryEvent, TrajectoryResult)
@@ -50,6 +50,8 @@ class RemoteBackend(InferenceBackend):
     name = "remote"
 
     def __init__(self, url: str, *, timeout: float = 300.0,
+                 connect_timeout: Optional[float] = None,
+                 read_timeout: Optional[float] = None,
                  keep_alive: bool = True):
         self.url = url.rstrip("/")
         sp = urlsplit(self.url if "//" in self.url else "http://" + self.url)
@@ -59,7 +61,13 @@ class RemoteBackend(InferenceBackend):
         self._host = sp.hostname or "127.0.0.1"
         self._port = sp.port or 80
         self._base_path = sp.path.rstrip("/")
+        # `timeout` is the one-knob form; the split knobs let a router
+        # health probe fail fast on a dead replica (small connect_timeout)
+        # while long generate calls keep their full read budget
         self.timeout = timeout
+        self.connect_timeout = (timeout if connect_timeout is None
+                                else connect_timeout)
+        self.read_timeout = timeout if read_timeout is None else read_timeout
         self.keep_alive = keep_alive
         self._conn: Optional[http.client.HTTPConnection] = None
         self._conn_lock = threading.Lock()
@@ -89,9 +97,20 @@ class RemoteBackend(InferenceBackend):
 
     # -- wire plumbing -------------------------------------------------------
     def _open(self) -> http.client.HTTPConnection:
+        """Dial under ``connect_timeout``, then rebudget the established
+        socket to ``read_timeout`` — raises ``OSError`` on dial failure
+        (callers map it to the transport-level ``replica_unavailable``)."""
         self.connections_opened += 1
-        return http.client.HTTPConnection(self._host, self._port,
-                                          timeout=self.timeout)
+        conn = http.client.HTTPConnection(self._host, self._port,
+                                          timeout=self.connect_timeout)
+        try:
+            conn.connect()
+            if conn.sock is not None:
+                conn.sock.settimeout(self.read_timeout)
+        except BaseException:
+            conn.close()
+            raise
+        return conn
 
     def _roundtrip(self, conn, method: str, path: str, body, stream: bool):
         conn.request(method, self._base_path + path, body=body, headers={
@@ -115,12 +134,16 @@ class RemoteBackend(InferenceBackend):
             # dedicated socket: SSE holds its response open until the
             # ``done`` frame, and /v1/cancel must not queue behind the
             # pooled connection's in-flight call (the one it cancels)
-            conn = self._open()
+            try:
+                conn = self._open()
+            except OSError as e:
+                raise ReplicaUnavailableError(
+                    f"cannot reach {self.url}{path}: {e}") from None
             try:
                 resp = self._roundtrip(conn, method, path, body, stream)
             except OSError as e:
                 conn.close()
-                raise InternalServerError(
+                raise ReplicaUnavailableError(
                     f"cannot reach {self.url}{path}: {e}") from None
             if stream:
                 if resp.status >= 400:
@@ -141,7 +164,11 @@ class RemoteBackend(InferenceBackend):
             with self._conn_lock:
                 for attempt in (0, 1):
                     fresh = self._conn is None
-                    conn = self._conn if not fresh else self._open()
+                    try:
+                        conn = self._conn if not fresh else self._open()
+                    except OSError as e:
+                        raise ReplicaUnavailableError(
+                            f"cannot reach {self.url}{path}: {e}") from None
                     self._conn = conn
                     try:
                         resp = self._roundtrip(conn, method, path, body,
@@ -153,7 +180,7 @@ class RemoteBackend(InferenceBackend):
                         if attempt == 0 and not fresh \
                                 and isinstance(e, _reuse_errors):
                             continue          # stale keep-alive socket
-                        raise InternalServerError(
+                        raise ReplicaUnavailableError(
                             f"cannot reach {self.url}{path}: {e}") from None
                     if resp.will_close:       # server opted out of reuse
                         self._conn = None
@@ -201,25 +228,34 @@ class RemoteBackend(InferenceBackend):
         try:
             event: Optional[str] = None
             data_lines: List[str] = []
-            for raw in resp:
-                line = raw.decode("utf-8").rstrip("\r\n")
-                if line.startswith("event:"):
-                    event = line[len("event:"):].strip()
-                elif line.startswith("data:"):
-                    data_lines.append(line[len("data:"):].strip())
-                elif line == "" and event is not None:
-                    payload = json.loads("\n".join(data_lines) or "null")
-                    if event == "event":
-                        yield TrajectoryEvent.from_json(payload)
-                    elif event in ("error", "cancelled"):
-                        # `cancelled` is the terminal frame of /v1/cancel —
-                        # reconstructed as RequestCancelledError by code
-                        raise error_from_json(payload)
-                    elif event == "done":
-                        return
-                    event, data_lines = None, []
-            raise InternalServerError(
-                "SSE stream ended without a 'done' frame")
+            try:
+                for raw in resp:
+                    line = raw.decode("utf-8").rstrip("\r\n")
+                    if line.startswith("event:"):
+                        event = line[len("event:"):].strip()
+                    elif line.startswith("data:"):
+                        data_lines.append(line[len("data:"):].strip())
+                    elif line == "" and event is not None:
+                        payload = json.loads("\n".join(data_lines) or "null")
+                        if event == "event":
+                            yield TrajectoryEvent.from_json(payload)
+                        elif event in ("error", "cancelled"):
+                            # `cancelled` is the terminal frame of
+                            # /v1/cancel — reconstructed as
+                            # RequestCancelledError by code
+                            raise error_from_json(payload)
+                        elif event == "done":
+                            return
+                        event, data_lines = None, []
+            except (http.client.HTTPException, OSError) as e:
+                raise ReplicaUnavailableError(
+                    f"server at {self.url} went away mid-stream: "
+                    f"{e}") from None
+            # a clean close with no terminal frame is the same condition:
+            # the server died between events (SSE is close-delimited)
+            raise ReplicaUnavailableError(
+                f"server at {self.url} closed the SSE stream without a "
+                f"terminal frame")
         finally:
             resp.close()
             conn.close()

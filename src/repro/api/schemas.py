@@ -180,12 +180,19 @@ class TrajectoryEvent:
 
 @dataclasses.dataclass
 class TrajectoryResult:
-    """Generated continuation of one trajectory (all backends)."""
+    """Generated continuation of one trajectory (all backends).
+
+    ``request_id`` echoes the id the request was tracked under when one was
+    in play — client-supplied, or assigned by the multi-replica router,
+    which pins ``stream``/``cancel``/``futures`` for that id to one replica.
+    Additive wire field; omitted when unset.
+    """
     tokens: List[int]
     ages: List[float]
     prompt_tokens: List[int]
     prompt_ages: List[float]
     backend: str = ""
+    request_id: Optional[str] = None
 
     @property
     def n_generated(self) -> int:
@@ -206,7 +213,7 @@ class TrajectoryResult:
                 for i, (t, a) in enumerate(zip(self.tokens, ages))]
 
     def to_json(self) -> dict:
-        return {
+        d: dict = {
             "protocol_version": WIRE_PROTOCOL_VERSION,
             "tokens": [int(t) for t in self.tokens],
             "ages": [float(a) for a in self.ages],
@@ -214,6 +221,9 @@ class TrajectoryResult:
             "prompt_ages": [float(a) for a in self.prompt_ages],
             "backend": self.backend,
         }
+        if self.request_id is not None:
+            d["request_id"] = str(self.request_id)
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "TrajectoryResult":
@@ -222,7 +232,9 @@ class TrajectoryResult:
                    ages=[float(a) for a in d.get("ages", [])],
                    prompt_tokens=[int(t) for t in d.get("prompt_tokens", [])],
                    prompt_ages=[float(a) for a in d.get("prompt_ages", [])],
-                   backend=str(d.get("backend", "")))
+                   backend=str(d.get("backend", "")),
+                   request_id=(str(d["request_id"])
+                               if d.get("request_id") is not None else None))
 
 
 @dataclasses.dataclass

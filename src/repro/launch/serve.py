@@ -1,7 +1,13 @@
 """Serving launcher: batched trajectory generation via the slot engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch delphi-2m \
-        [--requests 16] [--slots 8] [--ckpt runs/delphi]
+        [--requests 16] [--slots 8] [--ckpt runs/delphi] [--replicas 2]
+
+``--replicas N`` shards the request set across N engines through the same
+:class:`repro.serve.PrefixAffinityScheduler` the HTTP router uses — shared
+history prefixes land on the engine whose pool already holds them, and the
+engines run their ticks on concurrent background threads (jitted compute
+releases the GIL, so CPU replicas genuinely overlap).
 """
 from __future__ import annotations
 
@@ -19,6 +25,24 @@ from repro.serve import BatchedEngine, Request
 from repro.train import restore
 
 
+class _EngineShard:
+    """Just enough of ``ReplicaHandle``'s surface (``name`` / ``inflight``
+    / ``free_blocks``) for the affinity scheduler to rank local engines."""
+
+    def __init__(self, name: str, engine: BatchedEngine):
+        self.name = name
+        self.engine = engine
+        self.requests: list = []
+
+    @property
+    def inflight(self) -> int:
+        return len(self.requests)
+
+    def free_blocks(self):
+        st = self.engine.pool_stats()
+        return st.get("blocks_free")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="delphi-2m")
@@ -27,6 +51,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="shard requests across N engines via the router's "
+                         "prefix-affinity scheduler")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,19 +63,58 @@ def main():
     if args.ckpt:
         params = restore(args.ckpt, params)
 
-    eng = BatchedEngine(params, cfg, slots=args.slots,
-                        max_context=cfg.max_seq_len, seed=args.seed)
+    n_rep = max(args.replicas, 1)
+    shards = [_EngineShard(f"r{i}", BatchedEngine(
+        params, cfg, slots=args.slots, max_context=cfg.max_seq_len,
+        seed=args.seed + i)) for i in range(n_rep)]
 
     # prompts: prefixes of fresh synthetic patients (their known history)
     trajs, _ = generate_dataset(SimulatorConfig(
         n_train=args.requests, n_val=1, seed=args.seed + 17))
+    if n_rep == 1:
+        for tok, age in trajs:
+            half = max(len(tok) // 2, 1)
+            shards[0].requests.append(Request(
+                tokens=tok[:half], ages=age[:half], max_new=args.max_new))
+    else:
+        from repro.serve import PrefixAffinityScheduler
+        sched = PrefixAffinityScheduler(block_size=16)
+        for tok, age in trajs:
+            half = max(len(tok) // 2, 1)
+            req = Request(tokens=tok[:half], ages=age[:half],
+                          max_new=args.max_new)
+            shard, _ = sched.route(req.tokens, req.ages, shards)
+            shard.requests.append(req)
+        st = sched.stats()
+        counts = ", ".join(f"{s.name}={len(s.requests)}" for s in shards)
+        print(f"sharded {args.requests} requests over {n_rep} engines "
+              f"({counts}; affinity rate {st['affinity_rate']:.2f})")
+
     n_events = 0
     t0 = time.time()
-    for tok, age in trajs:
-        half = max(len(tok) // 2, 1)
-        eng.submit(Request(tokens=tok[:half], ages=age[:half],
-                           max_new=args.max_new))
-    done = eng.run()
+    for shard in shards:
+        for req in shard.requests:
+            shard.engine.submit(req)
+    if n_rep == 1:
+        done = shards[0].engine.run()
+    else:
+        # concurrent ticks: start every engine's background thread, then
+        # park on the per-request done flags (engine queue/slot stats are
+        # racy between admission and slot publication)
+        for shard in shards:
+            shard.engine.start(retain_completed=True)
+        done = []
+        try:
+            deadline = time.time() + 600.0
+            all_reqs = [r for s in shards for r in s.requests]
+            while time.time() < deadline:
+                if all(r.done for r in all_reqs):
+                    break
+                time.sleep(0.05)
+        finally:
+            for shard in shards:
+                shard.engine.stop()
+                done.extend(shard.engine.completed)
     dt = time.time() - t0
     for r in done:
         n_events += len(r.out_tokens)

@@ -1,18 +1,28 @@
 """Serving substrate: batched engine with slot continuous batching, plus the
-HTTP/SSE wire front-end (``repro.serve.server``, imported lazily to keep
-``import repro.serve`` free of the client API stack)."""
+HTTP/SSE wire front-end (``repro.serve.server``) and the multi-replica
+prefix-affinity router (``repro.serve.router``) — both imported lazily to
+keep ``import repro.serve`` free of the client API stack."""
 from repro.serve.engine import (BatchedEngine, BlockAllocator,
                                 ReferenceEngine, Request)
-from repro.serve.prefix import (PrefixIndex, SharedBlockPool,
+from repro.serve.prefix import (PrefixIndex, SharedBlockPool, prompt_digests,
                                 ring_reference_futures)
 
 __all__ = ["BatchedEngine", "BlockAllocator", "ReferenceEngine", "Request",
-           "SharedBlockPool", "PrefixIndex", "ring_reference_futures",
-           "InferenceServer"]
+           "SharedBlockPool", "PrefixIndex", "prompt_digests",
+           "ring_reference_futures", "InferenceServer", "RouterServer",
+           "ReplicaSupervisor", "PrefixAffinityScheduler"]
+
+_LAZY = {
+    "InferenceServer": "repro.serve.server",
+    "RouterServer": "repro.serve.router",
+    "ReplicaSupervisor": "repro.serve.router",
+    "PrefixAffinityScheduler": "repro.serve.router",
+}
 
 
 def __getattr__(name):
-    if name == "InferenceServer":
-        from repro.serve.server import InferenceServer
-        return InferenceServer
+    mod = _LAZY.get(name)
+    if mod is not None:
+        import importlib
+        return getattr(importlib.import_module(mod), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -47,7 +47,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["SharedBlockPool", "PrefixIndex", "ring_reference_futures"]
+__all__ = ["SharedBlockPool", "PrefixIndex", "prompt_digests",
+           "ring_reference_futures"]
 
 
 class SharedBlockPool:
@@ -167,6 +168,43 @@ def _chunk_digest(prev: bytes, toks: np.ndarray,
     return h.digest()
 
 
+def prompt_digests(tokens, ages, block_size: int
+                   ) -> Tuple[List[bytes], bytes]:
+    """Chained blake2b digests of a prompt's (token, age) history.
+
+    Returns ``(chain, key)``: one digest per FULL ``block_size`` chunk
+    (chunk ``i`` folds in chunk ``i-1``'s digest, so digest ``i`` names the
+    whole prefix through block ``i``) plus a whole-prompt key that also
+    folds in the partial tail and the exact length.
+
+    This is the shared vocabulary between a replica's :class:`PrefixIndex`
+    (which blocks are resident) and the multi-replica router's
+    prefix-affinity scheduler (``repro.serve.router``): both sides hash the
+    same history to the same chain, so the router can route a request to
+    the replica whose pool already holds its prefix blocks without ever
+    seeing that pool.
+    """
+    toks = np.asarray(tokens, np.int64)
+    ags = None if ages is None else np.asarray(ages, np.float32)
+    bs = block_size
+    S = len(toks)
+    full, prev = [], b"prefix-v1"
+    for i in range(S // bs):
+        prev = _chunk_digest(prev, toks[i * bs:(i + 1) * bs],
+                             None if ags is None
+                             else ags[i * bs:(i + 1) * bs])
+        full.append(prev)
+    key = prev
+    if S % bs:
+        key = _chunk_digest(prev, toks[-(S % bs):],
+                            None if ags is None else ags[-(S % bs):])
+    # fold the exact length in so "aligned prompt" vs "same prompt plus
+    # an empty tail" cannot collide
+    key = hashlib.blake2b(key + S.to_bytes(8, "little"),
+                          digest_size=16).digest()
+    return full, key
+
+
 class _Entry:
     __slots__ = ("key", "chain", "blocks", "complete", "S", "age0", "logits",
                  "hits")
@@ -217,25 +255,7 @@ class PrefixIndex:
 
     # -- hashing --------------------------------------------------------------
     def _digests(self, tokens, ages) -> Tuple[List[bytes], bytes]:
-        toks = np.asarray(tokens, np.int64)
-        ags = None if ages is None else np.asarray(ages, np.float32)
-        bs = self.block_size
-        S = len(toks)
-        full, prev = [], b"prefix-v1"
-        for i in range(S // bs):
-            prev = _chunk_digest(prev, toks[i * bs:(i + 1) * bs],
-                                 None if ags is None
-                                 else ags[i * bs:(i + 1) * bs])
-            full.append(prev)
-        key = prev
-        if S % bs:
-            key = _chunk_digest(prev, toks[-(S % bs):],
-                                None if ags is None else ags[-(S % bs):])
-        # fold the exact length in so "aligned prompt" vs "same prompt plus
-        # an empty tail" cannot collide
-        key = hashlib.blake2b(key + S.to_bytes(8, "little"),
-                              digest_size=16).digest()
-        return full, key
+        return prompt_digests(tokens, ages, self.block_size)
 
     # -- queries (side-effect-free: admission probes them repeatedly; the
     #    engine calls touch() only when an admission actually lands) ---------

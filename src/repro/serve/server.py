@@ -49,6 +49,7 @@ import argparse
 import contextlib
 import itertools
 import json
+import socket
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Iterator, List, Optional, Tuple
@@ -76,6 +77,39 @@ _ENDPOINTS = {
 }
 
 
+class _TrackingHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer that remembers its accepted sockets so
+    :meth:`sever_connections` can cut every live connection (keep-alive and
+    mid-SSE included) — ``shutdown()`` only stops NEW accepts, which makes
+    a graceful stop but not a crash.  The router's failover tests use this
+    to simulate an in-process replica dying mid-stream."""
+
+    def __init__(self, *a, **kw):
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        super().__init__(*a, **kw)
+
+    def process_request(self, request, client_address):
+        with self._conns_lock:
+            self._conns.add(request)
+        super().process_request(request, client_address)
+
+    def shutdown_request(self, request):
+        with self._conns_lock:
+            self._conns.discard(request)
+        super().shutdown_request(request)
+
+    def sever_connections(self) -> int:
+        with self._conns_lock:
+            conns = list(self._conns)
+        for s in conns:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass                        # already gone
+        return len(conns)
+
+
 class InferenceServer:
     """Threaded HTTP wrapper around one ``repro.api`` backend.
 
@@ -97,7 +131,7 @@ class InferenceServer:
         # them (the engine serializes on its own tick thread instead)
         self._serial = threading.Lock()
         handler = type("_BoundHandler", (_Handler,), {"srv": self})
-        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd = _TrackingHTTPServer((host, port), handler)
         self.httpd.daemon_threads = True
         # never join handler threads on close: a stalled client (open
         # connection, unread SSE) would park stop() forever
@@ -138,6 +172,15 @@ class InferenceServer:
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
+
+    def kill(self) -> None:
+        """Crash simulation (in-process replica failover tests): sever every
+        live connection FIRST — an open SSE response dies without a terminal
+        frame, keep-alive sockets reset — then tear down like :meth:`stop`.
+        A graceful stop would let handler threads flush structured error
+        frames, which a crashed process never does."""
+        self.httpd.sever_connections()
+        self.stop()
 
     def __enter__(self) -> "InferenceServer":
         return self.start()
@@ -484,9 +527,38 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--request-timeout", type=float, default=300.0,
                     help="seconds before an in-flight request is expired "
                          "and its slot/blocks reclaimed")
+    scale = ap.add_argument_group("scaling out (repro.serve.router)")
+    scale.add_argument("--replicas", type=int, default=1,
+                       help="N > 1 fronts N engine replicas with the "
+                            "prefix-affinity router instead of serving one "
+                            "backend directly")
+    scale.add_argument("--replica-mode", choices=("inprocess", "subprocess"),
+                       default="inprocess",
+                       help="--replicas placement: engines in this process "
+                            "(shared params + jit cache) or one repro-serve "
+                            "subprocess per replica")
+    scale.add_argument("--replica-urls", metavar="URL[,URL...]", default=None,
+                       help="route over already-running repro-serve "
+                            "replicas instead of starting any")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per HTTP request")
     args = ap.parse_args(argv)
+
+    if args.replicas > 1 or args.replica_urls:
+        from repro.serve.router import ROUTER_NAME, build_router
+        router = build_router(args)
+        n = len(router.supervisor.replicas)
+        print(f"repro-serve: {ROUTER_NAME} over {n} replicas on "
+              f"{router.address} (wire protocol v{WIRE_PROTOCOL_VERSION})")
+        for r in router.supervisor.replicas:
+            print(f"  replica {r.name}: {r.url}")
+        for name, ep in _ENDPOINTS.items():
+            print(f"  {ep['method']:4s} {ep['path']}")
+        try:
+            router.serve_forever()
+        except KeyboardInterrupt:
+            print("repro-serve: shutting down")
+        return 0
 
     backend = _build_backend(args)
     server = InferenceServer(backend, args.host, args.port,

@@ -17,9 +17,9 @@ from repro.api import (AgesLengthMismatchError, AgesRequiredError, ApiError,
                        TrajectoryEvent, TrajectoryResult,
                        WIRE_PROTOCOL_VERSION, error_from_code,
                        error_from_json)
-from repro.api.errors import (InvalidRequestError, RequestCancelledError,
-                              RequestTimeoutError, UnknownEndpointError,
-                              UnsupportedOverrideError)
+from repro.api.errors import (InvalidRequestError, ReplicaUnavailableError,
+                              RequestCancelledError, RequestTimeoutError,
+                              UnknownEndpointError, UnsupportedOverrideError)
 
 from hypcompat import given, settings, st
 
@@ -196,6 +196,7 @@ def test_error_codes_stable():
         UnknownEndpointError: ("unknown_endpoint", 404),
         RequestTimeoutError: ("timeout", 504),
         RequestCancelledError: ("request_cancelled", 409),
+        ReplicaUnavailableError: ("replica_unavailable", 503),
     }
     for cls, (code, status) in expect.items():
         e = cls("boom")

@@ -42,6 +42,7 @@ FROZEN_WIRE_V1: Dict[str, int] = {
     "unknown_endpoint": 404,
     "timeout": 504,
     "request_cancelled": 409,
+    "replica_unavailable": 503,
     "internal": 500,
 }
 
