@@ -275,6 +275,7 @@ def bench_serving_engine():
          f"{(ev_d / dt_d) / max(ev_r / dt_r, 1e-9):.2f}x tokens/s "
          f"device-resident vs seed")
     bench_paged_vs_ring(params, cfg)
+    bench_chunked_prefill()
 
 
 def bench_paged_vs_ring(params, cfg):
@@ -333,6 +334,170 @@ def bench_paged_vs_ring(params, cfg):
          f"{paged.peak_active / max(ring.peak_active, 1):.1f}x peak "
          f"concurrent requests at equal KV bytes "
          f"({paged.cache_bytes / max(ring.cache_bytes, 1):.2f}x bytes)")
+
+
+def _git_rev() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10).stdout.strip() \
+            or "unknown"
+    except Exception:               # noqa: BLE001 — bench must not die on VCS
+        return "unknown"
+
+
+def _bench_serve_record(mode: str, config: dict, metrics: dict) -> None:
+    """Append one machine-readable record to BENCH_serve.json (JSON lines:
+    each run appends, nothing is rewritten — diffable across commits)."""
+    import json
+    path = os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "BENCH_serve.json")
+    rec = {"schema": 1, "bench": "serve", "mode": mode,
+           "git_rev": _git_rev(), "timestamp": round(time.time(), 1),
+           "config": config, "metrics": metrics}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def bench_chunked_prefill():
+    """Mixed long/short workload: in-flight short decodes tick while long
+    prompts keep arriving.  Unchunked, every long admission's monolithic
+    prefill stalls ALL in-flight decode slots for the whole prompt — the
+    stall lands in the short requests' per-event latency tail.  Chunked
+    (``prefill_chunk_tokens``), prefill is metered through the per-tick
+    budget between decode ticks, so the tail collapses while throughput
+    holds (bit-identical outputs either way — the parity invariant
+    scripts/paged_parity.py and tests/test_prefix.py pin down).  A third
+    run shows partial-prefix suffix prefill: a long prompt extending an
+    already-cached prefix admits by reference and prefills only the
+    suffix.  Every row is appended to BENCH_serve.json."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import BatchedEngine, Request
+
+    cfg = get_config("delphi-2m", reduced=True).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    W, bs, chunk = 512, 16, 64
+    S_long, n_long, n_short, max_new = 448, 6, 6, 48
+
+    def shorts():
+        return [Request(
+            tokens=((np.arange(3, 9) + 7 * i) % 90).astype(np.int32),
+            ages=np.linspace(0.0, 30.0, 6).astype(np.float32),
+            max_new=max_new) for i in range(n_short)]
+
+    def longs():
+        return [Request(
+            tokens=((np.arange(3, 3 + S_long) + 11 * i) % 90).astype(
+                np.int32),
+            ages=np.linspace(0.0, 60.0, S_long).astype(np.float32),
+            max_new=4) for i in range(n_long)]
+
+    def run(chunk_tokens):
+        eng = BatchedEngine(params, cfg, slots=12, max_context=W,
+                            cache="paged", block_size=bs, blocks=256,
+                            prefill_chunk_tokens=chunk_tokens)
+
+        def drive():
+            ss, ls = shorts(), longs()
+            for r in ss:
+                eng.submit(r)
+            pending = list(ls)
+            lat: list = []
+            seen = [0] * n_short
+            now = time.perf_counter()
+            last = [now] * n_short
+            tick, t0 = 0, now
+            while not all(r.done for r in ss + ls):
+                if pending and tick % 8 == 3:   # longs arrive mid-decode
+                    eng.submit(pending.pop(0))
+                eng.step()
+                tick += 1
+                now = time.perf_counter()
+                for i, r in enumerate(ss):
+                    k = len(r.out_tokens)
+                    if k > seen[i]:
+                        dt = (now - last[i]) / (k - seen[i])
+                        lat.extend([dt] * (k - seen[i]))
+                        seen[i], last[i] = k, now
+            wall = now - t0
+            ev = sum(len(r.out_tokens) for r in ss + ls)
+            return np.asarray(lat), ev, wall
+        drive()                                 # warm every jit shape
+        lat, ev, wall = drive()
+        assert eng.allocator.used == 0, "mixed-workload bench leaked blocks"
+        return lat, ev, wall, eng.pool_stats()
+
+    config = {"slots": 12, "max_context": W, "block_size": bs,
+              "blocks": 256, "S_long": S_long, "n_long": n_long,
+              "n_short": n_short, "max_new_short": max_new}
+    results = {}
+    for mode, ct in (("monolithic", None), ("chunked", chunk)):
+        lat, ev, wall, st = run(ct)
+        p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
+        results[mode] = (p50, p95, ev / wall)
+        derived = (f"{ev / wall:.1f} events/s, p50 {p50 * 1e3:.1f} ms "
+                   f"per short-request event")
+        if ct is not None:
+            derived += (f" (chunk={ct}, {st['prefill_chunks']} chunks / "
+                        f"{st['chunked_prefills']} prefills)")
+        _row(f"serving_mixed_{mode}_p95", p95 * 1e6, derived)
+        _bench_serve_record(
+            mode, dict(config, prefill_chunk_tokens=ct),
+            {"p50_event_latency_us": round(p50 * 1e6, 1),
+             "p95_event_latency_us": round(p95 * 1e6, 1),
+             "events_per_s": round(ev / wall, 2),
+             "chunked_prefills": st["chunked_prefills"],
+             "prefill_chunks": st["prefill_chunks"],
+             "suffix_tokens_saved": st["suffix_tokens_saved"],
+             "preemptions": st["preemptions"]})
+    gain = results["monolithic"][1] / max(results["chunked"][1], 1e-12)
+    thru = results["chunked"][2] / max(results["monolithic"][2], 1e-12)
+    _row("serving_chunked_p95_gain", 0.0,
+         f"{gain:.1f}x lower p95 per-event latency at {thru:.2f}x "
+         f"throughput, chunked vs monolithic prefill")
+    assert gain >= 2.0, \
+        f"chunked prefill p95 gain {gain:.2f}x < 2x over monolithic"
+
+    # partial-prefix suffix prefill: the second long prompt extends the
+    # first's prefix, so only the unmatched suffix runs through prefill
+    eng = BatchedEngine(params, cfg, slots=4, max_context=W, cache="paged",
+                        block_size=bs, blocks=128, prefix_cache=True,
+                        prefill_chunk_tokens=chunk)
+    base = longs()[0]
+    eng.submit(base)
+    eng.run()
+    matched = (S_long // bs) * bs
+    ext = Request(
+        tokens=np.concatenate([np.asarray(base.tokens),
+                               (np.arange(10, 26) % 90)]).astype(np.int32),
+        ages=np.concatenate([np.asarray(base.ages),
+                             np.linspace(61.0, 70.0, 16)]).astype(
+                                 np.float32),
+        max_new=4)
+    t0 = time.perf_counter()
+    eng.submit(ext)
+    eng.run()
+    dt_suffix = time.perf_counter() - t0
+    st = eng.pool_stats()
+    assert st["suffix_tokens_saved"] >= matched, \
+        f"suffix admission saved {st['suffix_tokens_saved']} < {matched}"
+    _row("serving_suffix_prefill", dt_suffix * 1e6,
+         f"suffix_tokens_saved={st['suffix_tokens_saved']} of "
+         f"S={S_long + 16} prompt, partial_hits="
+         f"{st['prefix_cache']['partial_hits']} (prefix-cache reuse)")
+    _bench_serve_record(
+        "suffix", {"slots": 4, "max_context": W, "block_size": bs,
+                   "blocks": 128, "prefill_chunk_tokens": chunk,
+                   "S_base": S_long, "S_ext": S_long + 16},
+        {"suffix_tokens_saved": st["suffix_tokens_saved"],
+         "partial_hits": st["prefix_cache"]["partial_hits"],
+         "prefill_chunks": st["prefill_chunks"],
+         "ext_request_wall_us": round(dt_suffix * 1e6, 1)})
+    eng.drop_prefix_cache()
+    assert eng.allocator.used == 0
 
 
 def bench_futures():

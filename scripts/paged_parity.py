@@ -1,6 +1,6 @@
 """CI guard: paged KV-cache engine == ring engine, and no block leaks.
 
-Four phases:
+Five phases:
 
 1. **Parity** — same config, same injected uniforms, same slot count: the
    paged engine's trajectories must be bit-identical to the ring engine's
@@ -21,6 +21,13 @@ Four phases:
    undersized prefix-cached pool with mid-flight child cancellations and
    an expiring-deadline batch: every refcount must drain to zero and the
    prefix index must be empty (and the pool fully free) after eviction.
+
+5. **Chunked-prefill storm** — mixed long/short prompts on an undersized
+   chunked (``prefill_chunk_tokens``) prefix-cached pool, with cancels
+   landing while long prompts are still mid-prefill and pool pressure
+   preempting mid-prefill slots: partially-written prompt blocks (and
+   shared prefix refs) must all release — zero leaked blocks, refcounts
+   drained, empty block table.
 
 Run:  PYTHONPATH=src python scripts/paged_parity.py
 """
@@ -246,6 +253,69 @@ def fork_storm(params, cfg) -> None:
           f"{st['shared_blocks_peak']}), refcounts drained, index empty")
 
 
+def chunked_storm(params, cfg) -> None:
+    # mixed long/short prompts on an undersized chunked pool: long prompts
+    # span several one-block chunks, so cancels and preemptions land while
+    # slots are still mid-prefill — their partially-written blocks (and the
+    # shared prefix refs acquired at admission) must all release
+    eng = BatchedEngine(params, cfg, slots=4, max_context=32, cache="paged",
+                        block_size=8, blocks=8, prefix_cache=True,
+                        prefill_chunk_tokens=8).start()
+    base = (np.arange(3, 23, dtype=np.int32)) % 90      # shared long prefix
+    base_ages = np.linspace(0.0, 30.0, 20).astype(np.float32)
+    try:
+        # warm registrant: its 2 full blocks seed the index so later long
+        # admissions take the partial-hit suffix path
+        warm = Request(tokens=base[:16], ages=base_ages[:16], max_new=2,
+                       request_id="chunk-warm")
+        eng.submit(warm)
+        deadline = time.monotonic() + 60
+        while not warm.done and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert warm.done and warm.error is None
+        reqs = []
+        for s in range(24):
+            if s % 2 == 0:               # long: 16-token prefix + tail
+                S = 17 + (s % 4)
+                toks, ages = base[:S], base_ages[:S]
+            else:                        # short: single partial block
+                S = 3 + (s % 5)
+                toks = (np.arange(3, 3 + S, dtype=np.int32) + s) % 90
+                ages = np.linspace(0.0, 30.0, S).astype(np.float32)
+            r = Request(tokens=toks, ages=ages, max_new=12,
+                        request_id=f"chunk-storm-{s}")
+            reqs.append(r)
+            eng.submit(r)
+        time.sleep(0.15)                 # some longs are mid-prefill now
+        for i, r in enumerate(reqs):
+            if i % 3 == 0:
+                eng.cancel(r.request_id)
+        deadline = time.monotonic() + 120
+        while (not all(r.done for r in reqs)) and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert all(r.done for r in reqs), "chunked storm did not drain"
+    finally:
+        eng.stop()
+    bad = [r for r in reqs if r.error is not None
+           and not isinstance(r.error, RequestCancelledError)]
+    assert not bad, [type(r.error).__name__ for r in bad]
+    st = eng.pool_stats()
+    assert st["chunked_prefills"] > 0, "no admission took the chunked path"
+    assert st["prefill_chunks"] > st["chunked_prefills"], \
+        "no prompt actually spanned multiple chunks"
+    assert st["prefill_in_progress"] == 0
+    eng.drop_prefix_cache()
+    assert not eng.pool._refs, f"refcounts not drained: {eng.pool._refs}"
+    assert eng.allocator.used == 0, \
+        f"LEAK: {eng.allocator.used} blocks still allocated"
+    assert (eng._table == -1).all(), "LEAK: block table still references pool"
+    print(f"chunked storm OK: {len(reqs)} requests "
+          f"({st['chunked_prefills']} chunked prefills, "
+          f"{st['prefill_chunks']} chunks, {st['suffix_tokens_saved']} "
+          f"suffix tokens saved, {st['preemptions']} preemptions), "
+          f"zero leaked blocks")
+
+
 def main() -> int:
     cfg = get_config("delphi-2m", reduced=True).replace(
         dtype="float32", vocab_size=96, max_seq_len=48, max_age=1e9)
@@ -254,6 +324,7 @@ def main() -> int:
     storm(params, cfg)
     fork_parity(params, cfg)
     fork_storm(params, cfg)
+    chunked_storm(params, cfg)
     print("paged_parity: all checks passed")
     return 0
 

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
 from repro.kernels.ops import (flash_attention, paged_decode_attention,
-                               ssd_intra, tte_sample)
+                               ssd_intra, suffix_prefill_attention,
+                               tte_sample)
 
 __all__ = ["flash_attention", "paged_decode_attention", "ssd_intra",
-           "tte_sample"]
+           "suffix_prefill_attention", "tte_sample"]

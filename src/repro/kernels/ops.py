@@ -82,6 +82,33 @@ def paged_decode_attention(q, k_pool, v_pool, table, pos, step, *,
     return out.reshape(B, Hq, hd)
 
 
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_per_kv"))
+def suffix_prefill_attention(q, k, v, ctx_k, ctx_v, q_pos, ctx_pos, *,
+                             causal: bool = True,
+                             window: Optional[int] = None,
+                             q_per_kv: int = 1) -> jax.Array:
+    """Suffix prefill: chunk queries attend over cached context K/V plus the
+    chunk itself, masked by absolute position.
+
+    q/k/v: (B, Sc, Hq|Hkv, hd) the suffix chunk's projected (roped) heads;
+    ctx_k/ctx_v: (B, C, Hkv, hd) pre-existing cache context (earlier chunks
+    or prefix-cache hits); q_pos: (B, Sc) and ctx_pos: (B, C) absolute
+    positions, -1 = invalid (right padding / trash-block slots).  Causality
+    and sliding windows are decided by position difference, so a chunk
+    starting mid-prompt composes exactly with the context before it.
+    Dispatches through the online-softmax chunked path (the jnp flash twin
+    of ``kernels.flash_attention`` — a concat along KV would break its
+    index-based causal predicate, positions are the ground truth here).
+    Returns (B, Sc, Hq, hd).
+    """
+    from repro.models.attention import chunked_attention
+    kc = jnp.concatenate([ctx_k, k], axis=1)
+    vc = jnp.concatenate([ctx_v, v], axis=1)
+    kp = jnp.concatenate([ctx_pos, q_pos], axis=1)
+    return chunked_attention(q, kc, vc, q_pos, kp, causal=causal,
+                             window=window, q_per_kv=q_per_kv)
+
+
 @functools.partial(jax.jit, static_argnames=("bv", "interpret"))
 def tte_sample(logits, u, *, bv: int = 2048,
                interpret: Optional[bool] = None

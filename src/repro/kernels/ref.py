@@ -107,6 +107,36 @@ def paged_decode_attention_ref(q, k_pool, v_pool, table, pos, step,
     return jnp.einsum("bhgw,bwhd->bhgd", w, v)
 
 
+def suffix_prefill_attention_ref(q, k, v, ctx_k, ctx_v, q_pos, ctx_pos,
+                                 causal: bool = True,
+                                 window: Optional[int] = None,
+                                 q_per_kv: int = 1) -> jax.Array:
+    """Suffix-prefill oracle: dense masked softmax over context + chunk.
+
+    q/k/v: (B, Sc, Hq|Hkv, hd) suffix chunk heads; ctx_k/ctx_v:
+    (B, C, Hkv, hd) cached context; q_pos (B, Sc) / ctx_pos (B, C) absolute
+    positions, -1 = invalid.  GQA by head repetition, fp32 softmax.
+    Returns (B, Sc, Hq, hd) fp32.
+    """
+    B, Sq, Hq, hd = q.shape
+    G = q_per_kv
+    kc = jnp.concatenate([ctx_k, k], axis=1).astype(jnp.float32)
+    vc = jnp.concatenate([ctx_v, v], axis=1).astype(jnp.float32)
+    kp = jnp.concatenate([ctx_pos, q_pos], axis=1)
+    kc = jnp.repeat(kc, G, axis=2)                     # (B, T, Hq, hd)
+    vc = jnp.repeat(vc, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kc) * hd ** -0.5
+    valid = kp[:, None, None, :] >= 0
+    if causal:
+        rel = q_pos[:, None, :, None] - kp[:, None, None, :]
+        valid = valid & (rel >= 0)
+        if window is not None:
+            valid = valid & (rel < window)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vc)
+
+
 def tte_sample_ref(logits, u) -> Tuple[jax.Array, jax.Array]:
     """Competing-exponential sampler oracle.
 

@@ -54,7 +54,17 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="shard requests across N engines via the router's "
                          "prefix-affinity scheduler")
+    ap.add_argument("--cache", choices=("ring", "paged"), default="ring",
+                    help="KV layout per engine (paged enables chunked "
+                         "prefill and prefix sharing)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    metavar="N",
+                    help="--cache paged: prefill in N-token chunks "
+                         "interleaved with decode ticks (multiple of the "
+                         "16-token block size)")
     args = ap.parse_args()
+    if args.prefill_chunk_tokens is not None and args.cache != "paged":
+        ap.error("--prefill-chunk-tokens requires --cache paged")
 
     cfg = get_config(args.arch)
     if jax.default_backend() == "cpu":
@@ -66,7 +76,9 @@ def main():
     n_rep = max(args.replicas, 1)
     shards = [_EngineShard(f"r{i}", BatchedEngine(
         params, cfg, slots=args.slots, max_context=cfg.max_seq_len,
-        seed=args.seed + i)) for i in range(n_rep)]
+        seed=args.seed + i, cache=args.cache,
+        prefill_chunk_tokens=args.prefill_chunk_tokens))
+        for i in range(n_rep)]
 
     # prompts: prefixes of fresh synthetic patients (their known history)
     trajs, _ = generate_dataset(SimulatorConfig(

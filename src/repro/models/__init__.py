@@ -1,11 +1,12 @@
 """Architecture zoo substrate (pure-JAX, pytree parameters)."""
 from repro.models.attention import LayerCache, PagedCache, PagedLayerView
-from repro.models.model import (decode_step, forward, init_params,
-                                make_decode_cache, make_paged_decode_cache,
+from repro.models.model import (decode_step, forward, forward_suffix,
+                                init_params, make_decode_cache,
+                                make_paged_decode_cache,
                                 mask_padded_positions, n_attn_apps,
                                 param_count)
 
 __all__ = ["LayerCache", "PagedCache", "PagedLayerView", "decode_step",
-           "forward", "init_params", "make_decode_cache",
+           "forward", "forward_suffix", "init_params", "make_decode_cache",
            "make_paged_decode_cache", "mask_padded_positions", "n_attn_apps",
            "param_count"]

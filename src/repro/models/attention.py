@@ -464,12 +464,18 @@ def attention(params, x, positions, cfg: ModelConfig, *, mode: str,
               memory=None, memory_pos=None, cross: bool = False,
               causal: bool = True, window: Optional[int] = None,
               use_rope: bool = True, cache_width: Optional[int] = None,
-              defer_write: bool = False):
+              defer_write: bool = False, ctx_k=None, ctx_v=None,
+              ctx_pos=None):
     """Run one attention layer.
 
     mode: "dense"   — full-sequence self/cross attention (train / encoder)
           "prefill" — like dense, but also returns a ring cache
           "decode"  — one-token step against ``cache`` at position ``step``
+          "suffix"  — chunked-prefill step: the tokens are a prompt *suffix*
+                      attending over pre-existing (roped) context K/V
+                      ``ctx_k``/``ctx_v`` (B, C, Hkv, hd) at absolute
+                      positions ``ctx_pos`` (B, C) plus themselves; returns
+                      the raw suffix (k, v) for the caller's cache write
     For cross-attention pass ``memory`` (B, M, d) in dense/prefill modes, or
     ``cross=True`` in decode mode (the cache then holds the projected memory
     K/V, written at prefill).
@@ -477,6 +483,20 @@ def attention(params, x, positions, cfg: ModelConfig, *, mode: str,
     dt = x.dtype
     G = cfg.q_per_kv
     win = window if window is not None else cfg.sliding_window
+
+    if mode == "suffix":
+        q, k, v = _project_qkv(params, x, x, cfg)
+        if use_rope:
+            # keys are stored post-RoPE: rotating at absolute positions
+            # keeps suffix K byte-compatible with the cached context K
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        from repro.kernels.ops import suffix_prefill_attention
+        o = suffix_prefill_attention(q, k, v, ctx_k, ctx_v, positions,
+                                     ctx_pos, causal=causal, window=win,
+                                     q_per_kv=G)
+        out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+        return out, (k, v)
 
     if mode == "decode":
         if cross:

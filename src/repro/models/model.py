@@ -116,16 +116,21 @@ def transformer_layer(lp, x, positions, cfg: ModelConfig, *, mode: str,
                       memory=None, causal: bool = True,
                       cache_width: Optional[int] = None,
                       moe_impl: str = "dense_scan",
-                      defer_write: bool = False):
+                      defer_write: bool = False, ctx_k=None, ctx_v=None,
+                      ctx_pos=None):
     """Pre-norm transformer block.  Returns (x, cache, cross_cache, aux).
 
     In decode mode with ``defer_write``, the second return is the (k, v) pair
-    of the new token instead of an updated cache (one post-scan scatter)."""
+    of the new token instead of an updated cache (one post-scan scatter).
+    In suffix mode the second return is the (k, v) pair of the chunk tokens
+    (same deferred-write contract), attending over ``ctx_k``/``ctx_v``/
+    ``ctx_pos`` — the already-cached prompt context."""
     use_rope = not cfg.age_encoding
     a, new_cache = attn_lib.attention(
         lp["attn"], apply_norm(lp["attn_norm"], x, cfg), positions, cfg,
         mode=mode, cache=cache, step=step, causal=causal,
-        use_rope=use_rope, cache_width=cache_width, defer_write=defer_write)
+        use_rope=use_rope, cache_width=cache_width, defer_write=defer_write,
+        ctx_k=ctx_k, ctx_v=ctx_v, ctx_pos=ctx_pos)
     x = x + a
     new_cross = cross_cache
     if "cross_attn" in lp:
@@ -310,6 +315,63 @@ def _transformer_stack(layers, x, positions, cfg, *, mode, memory=None,
     x, (k_news, v_news) = jax.lax.scan(body, x, (layers, caches))
     caches = attn_lib.cache_write_stacked(caches, k_news, v_news, step)
     return x, caches, None, jnp.zeros((), jnp.float32)
+
+
+def _suffix_stack(layers, x, positions, cfg, *, ctx_k, ctx_v, ctx_pos,
+                  moe_impl="dense_scan"):
+    """Scan a stacked transformer over a prompt *suffix* (chunked prefill).
+
+    ``ctx_k``/``ctx_v`` (L, B, C, Hkv, hd) are the already-cached context
+    K/V per layer (scan xs, like the paged decode scan); ``ctx_pos`` (B, C)
+    their absolute positions (-1 = invalid, shared across layers).  Returns
+    (x, k_news, v_news) where k_news/v_news (L, B, Sc, Hkv, hd) are the
+    suffix K/V for the caller's one stacked block write."""
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, kv, _, _ = transformer_layer(
+            lp, h, positions, cfg, mode="suffix", ctx_k=ck, ctx_v=cv,
+            ctx_pos=ctx_pos, moe_impl=moe_impl)
+        return h, kv
+    x, (k_news, v_news) = jax.lax.scan(body, x, (layers, ctx_k, ctx_v))
+    return x, k_news, v_news
+
+
+def forward_suffix(params, cfg: ModelConfig, batch: Dict[str, Any], ctx,
+                   *, last_index, moe_impl: str = "dense_scan") -> Dict[str, Any]:
+    """Chunked-prefill forward over a prompt *suffix*.
+
+    The suffix tokens attend over pre-existing cache context (gathered from
+    the paged pool by the caller) plus themselves, by absolute position —
+    the incremental half of a prefill whose earlier chunks (or prefix-cache
+    hits) already wrote their K/V.
+
+    batch: tokens (B, Sc) int32 [+ ages (B, Sc) for Delphi cfgs], positions
+    (B, Sc) int32 absolute positions (-1 = right padding).  ctx: dict with
+    "k"/"v" (L, B, C, Hkv, hd) roped context K/V and "pos" (B, C) absolute
+    positions (-1 = invalid).  ``last_index``: (B,) index of each example's
+    last valid suffix token (the bootstrap logits read there).
+
+    Returns {"logits": (B, 1, V), "k"/"v": (L, B, Sc, Hkv, hd)} — the
+    suffix K/V for the caller's paged block write.  Attention-cache
+    architectures only (same constraint as :func:`make_paged_decode_cache`).
+    """
+    t = cfg.arch_type
+    if t not in (cb.DENSE, cb.VLM, cb.MOE):
+        raise ValueError(f"suffix prefill supports attention-cache "
+                         f"architectures (dense/moe/vlm), not {t}")
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.age_encoding:
+        x = x + age_encoding(batch["ages"], cfg.d_model).astype(x.dtype)
+    positions = batch["positions"]
+    x, k_news, v_news = _suffix_stack(
+        params["layers"], x, positions, cfg, ctx_k=ctx["k"], ctx_v=ctx["v"],
+        ctx_pos=ctx["pos"], moe_impl=moe_impl)
+    idx = jnp.asarray(last_index, jnp.int32)
+    x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return {"logits": logits_head(params["embed"], x, cfg),
+            "k": k_news, "v": v_news}
 
 
 def _ssm_stack(layers, x, cfg, *, mode, caches=None):

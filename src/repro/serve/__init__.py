@@ -4,13 +4,15 @@ prefix-affinity router (``repro.serve.router``) — both imported lazily to
 keep ``import repro.serve`` free of the client API stack."""
 from repro.serve.engine import (BatchedEngine, BlockAllocator,
                                 ReferenceEngine, Request)
-from repro.serve.prefix import (PrefixIndex, SharedBlockPool, prompt_digests,
+from repro.serve.prefix import (PrefixIndex, SharedBlockPool,
+                                chunked_reference_trajectory, prompt_digests,
                                 ring_reference_futures)
 
 __all__ = ["BatchedEngine", "BlockAllocator", "ReferenceEngine", "Request",
            "SharedBlockPool", "PrefixIndex", "prompt_digests",
-           "ring_reference_futures", "InferenceServer", "RouterServer",
-           "ReplicaSupervisor", "PrefixAffinityScheduler"]
+           "ring_reference_futures", "chunked_reference_trajectory",
+           "InferenceServer", "RouterServer", "ReplicaSupervisor",
+           "PrefixAffinityScheduler"]
 
 _LAZY = {
     "InferenceServer": "repro.serve.server",

@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 __all__ = ["SharedBlockPool", "PrefixIndex", "prompt_digests",
-           "ring_reference_futures"]
+           "ring_reference_futures", "chunked_reference_trajectory"]
 
 
 class SharedBlockPool:
@@ -566,3 +566,177 @@ def ring_reference_futures(params, cfg, tokens, ages=None, *, n: int,
             if live[j]:
                 apply(j, arr[:, j])
     return [(out_t[j], out_a[j]) for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity oracle for chunked / suffix prefill
+# ---------------------------------------------------------------------------
+def chunked_reference_trajectory(params, cfg, tokens, ages=None, *,
+                                 max_new: int, uniforms,
+                                 chunk_tokens: int, slots: int = 4,
+                                 max_context: int = 512,
+                                 block_size: int = 16,
+                                 matched_tokens: int = 0,
+                                 blocks: Optional[int] = None,
+                                 temperature: float = 1.0,
+                                 sampler: str = "jnp"
+                                 ) -> Tuple[List[int], List[float]]:
+    """Scheduler-free single-request trajectory on a paged pool via chunked
+    suffix prefill — the oracle the interleaved engine path must match bit
+    for bit.
+
+    Mirrors ``BatchedEngine(prefill_chunk_tokens=chunk_tokens)`` serving one
+    request while bypassing the scheduler under test (admission budgeting,
+    the per-tick budget walk, preemption, the prefix index): the prompt's
+    suffix is driven through the engine's OWN module-level jits — one
+    ``_suffix_chunk_jit`` per ``_chunk_len``-sized chunk, a
+    ``_fork_rows_jit`` bootstrap from the final chunk's logits, then
+    ``_tick_u_jit`` decode ticks with block growth + position resets in the
+    engine's exact flush order.  Chunk geometry comes from the shared
+    ``_chunk_arrays`` helper, so both sides compile and run the *same*
+    executables per shape.
+
+    ``matched_tokens`` models a partial prefix-index hit: a warm pass
+    chunk-prefills ``tokens[:matched_tokens]`` (block-aligned, < S) into its
+    own blocks — standing in for the indexed registrant's blocks, which the
+    engine-side request acquires by reference — and the request's cursor
+    starts at that boundary, prefilling ONLY the unmatched suffix.  The
+    engine registrant must have served that aligned prefix with the same
+    ``chunk_tokens`` so the lent block bytes agree.
+
+    Bit-parity contract: injected ``uniforms`` (max_new, V) — row 0 is the
+    bootstrap event; the engine must run the request solo on a fresh engine
+    with the same ``slots``/``max_context``/``block_size``/``temperature``/
+    ``sampler``; and ``S + max_new <= max_context`` (no ring wrap: the
+    oracle never copy-on-writes).  Returns ``(tokens, fp32 ages)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models import make_paged_decode_cache
+    from repro.serve.engine import (_Knobs, _chunk_arrays, _chunk_len,
+                                    _commit_jit, _fork_rows_jit, _next_pow2,
+                                    _reset_pos_jit, _suffix_chunk_jit,
+                                    _tick_u_jit)
+    uniforms = np.asarray(uniforms, np.float32)
+    toks = np.asarray(tokens, np.int64)
+    ags = None if ages is None else np.asarray(ages)
+    S = len(toks)
+    bs = block_size
+    W = max_context
+    V = cfg.vocab_size
+    if uniforms.shape != (max_new, V):
+        raise ValueError(f"uniforms must be (max_new={max_new}, V={V}); "
+                         f"got {uniforms.shape}")
+    if S + max_new > W:
+        raise ValueError(
+            f"S + max_new = {S + max_new} > max_context={W}: the oracle "
+            f"forbids ring wrap (a wrapped slot copy-on-writes, which this "
+            f"straight line does not model)")
+    if matched_tokens % bs or not 0 <= matched_tokens < S:
+        raise ValueError(f"matched_tokens={matched_tokens} must be a "
+                         f"block-aligned length in [0, S)")
+    if chunk_tokens < bs:
+        raise ValueError(f"chunk_tokens={chunk_tokens} must be >= "
+                         f"block_size={bs}")
+    kn = _Knobs(slots=slots, max_context=W, is_delphi=cfg.age_encoding,
+                use_pallas=sampler == "pallas",
+                inv_temp=1.0 / max(temperature, 1e-6),
+                max_age=cfg.max_age, death_token=cfg.death_token, vocab=V)
+    nb = -(-S // bs)
+    nb_warm = matched_tokens // bs
+    if blocks is None:
+        blocks = nb_warm + -(-(S + max_new) // bs) + 2
+    cache = make_paged_decode_cache(cfg, slots, W, num_blocks=blocks,
+                                    block_size=bs)
+    nbs = W // bs
+    next_id = 1
+
+    def take(k: int) -> List[int]:
+        nonlocal next_id
+        ids = list(range(next_id, next_id + k))
+        next_id += k
+        if next_id > blocks:
+            raise ValueError(f"oracle pool of {blocks} blocks exhausted")
+        return ids
+
+    def run_chunks(row, start: int, end: int):
+        nonlocal cache
+        lg = None
+        cur = start
+        while cur < end:
+            n = _chunk_len(end, cur, chunk_tokens, bs)
+            t_, a_, p_, c_, d_, li_ = _chunk_arrays(toks, ags, cur, n, bs,
+                                                    row)
+            cache, lg = _suffix_chunk_jit(
+                params, cache, jnp.asarray(t_), jnp.asarray(a_),
+                jnp.asarray(p_), jnp.asarray(c_), jnp.asarray(d_),
+                jnp.asarray(li_), cfg=cfg)
+            cur += n
+        return lg
+
+    # warm pass: the indexed registrant's aligned prefix, in its own blocks
+    warm = take(nb_warm)
+    if nb_warm:
+        wrow = np.full((nbs,), -1, np.int32)
+        wrow[:nb_warm] = warm
+        run_chunks(wrow, 0, matched_tokens)
+
+    # request pass: lent blocks + fresh suffix blocks, cursor at the match
+    row = np.full((nbs,), -1, np.int32)
+    row[:nb] = warm + take(nb - nb_warm)
+    lg = run_chunks(row, matched_tokens, S)
+
+    age0 = float(ags[-1]) if ags is not None else 0.0
+    state = {
+        "last": jnp.zeros((slots,), jnp.int32),
+        "age": jnp.zeros((slots,), jnp.float32),
+        "step": jnp.zeros((slots,), jnp.int32),
+        "n_emitted": jnp.zeros((slots,), jnp.int32),
+        "max_new": jnp.ones((slots,), jnp.int32),
+        "active": jnp.zeros((slots,), bool),
+    }
+    lg_b = jnp.broadcast_to(lg[0][None], (1, V))
+    rows, packed = _fork_rows_jit(
+        lg_b, jnp.asarray(uniforms[0][None]),
+        jnp.full((1,), age0, jnp.float32), jnp.full((1,), S, jnp.int32),
+        jnp.full((1,), max_new, jnp.int32), kn=kn)
+    state = _commit_jit(state, jnp.asarray([0], np.int32), rows)
+
+    out_t: List[int] = []
+    out_a: List[float] = []
+    live = [True]
+
+    def apply(col):
+        evt, age, emit, finished = col
+        if emit >= 0.5:
+            out_t.append(int(evt))
+            if cfg.age_encoding:
+                out_a.append(float(age))
+        if finished >= 0.5:
+            live[0] = False
+
+    apply(np.asarray(packed)[:, 0])
+    pos = S
+    tab = np.full((slots, nbs), -1, np.int32)
+    table_dirty = True
+    npad = _next_pow2(max(1, slots))       # the engine's fresh-id padding
+    while live[0]:
+        jb = (pos % W) // bs
+        if row[jb] < 0:                    # decode growth, engine order:
+            row[jb] = take(1)[0]           # reset positions, then the table
+            ids = np.zeros(npad, np.int32)
+            ids[0] = row[jb]
+            cache = _reset_pos_jit(cache, jnp.asarray(ids))
+            table_dirty = True
+        if table_dirty:
+            tab[0] = row
+            pc = cache["self"]
+            cache = {"self": pc._replace(table=jnp.asarray(tab))}
+            table_dirty = False
+        u = np.full((slots, V), 0.5, np.float32)
+        u[0] = uniforms[len(out_t)]
+        cache, state, packed = _tick_u_jit(params, cache, state,
+                                           jnp.asarray(u), cfg=cfg, kn=kn)
+        apply(np.asarray(packed)[:, 0])
+        pos += 1
+    return out_t, out_a

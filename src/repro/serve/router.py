@@ -773,6 +773,16 @@ class RouterServer:
         sched = self.scheduler.stats()
         with self._lock:
             pinned = len(self._pins)
+        # fleet-wide chunked-prefill counters summed from the replicas'
+        # last probes (each replica's full healthz stays available below)
+        prefill = {"chunked_prefills": 0, "prefill_chunks": 0,
+                   "prefill_in_progress": 0, "suffix_tokens_saved": 0}
+        for s in replicas.values():
+            eng = (s.get("healthz") or {}).get("engine")
+            mem = eng.get("memory") if isinstance(eng, dict) else None
+            if isinstance(mem, dict):
+                for k in prefill:
+                    prefill[k] += int(mem.get(k) or 0)
         return {
             "ok": bool(healthy),
             "backend": "router",
@@ -783,6 +793,7 @@ class RouterServer:
                 "healthy_replicas": len(healthy),
                 "scheduler": sched,
                 "pinned_requests": pinned,
+                "prefill": prefill,
             },
         }
 
@@ -1098,6 +1109,8 @@ def _replica_argv_base(args) -> List[str]:
              "--request-timeout", str(args.request_timeout)]
     if args.blocks is not None:
         argv += ["--blocks", str(args.blocks)]
+    if getattr(args, "prefill_chunk_tokens", None) is not None:
+        argv += ["--prefill-chunk-tokens", str(args.prefill_chunk_tokens)]
     if args.prefix_cache is True:
         argv.append("--prefix-cache")
     elif args.prefix_cache is False:
@@ -1130,7 +1143,8 @@ def _shared_params_backend_factory(args) -> Callable[[int], object]:
         slots=args.slots, max_context=args.max_context, cache=args.cache,
         blocks=args.blocks, block_size=args.block_size,
         request_timeout=args.request_timeout,
-        prefix_cache=first.engine.prefix is not None)
+        prefix_cache=first.engine.prefix is not None,
+        prefill_chunk_tokens=getattr(args, "prefill_chunk_tokens", None))
     made = [first]
 
     def make_backend(i: int):

@@ -465,10 +465,15 @@ def _build_backend(args):
     if prefix_cache and args.cache != "paged":
         raise SystemExit("repro-serve: --prefix-cache requires --cache "
                          "paged (the ring layout has no shareable blocks)")
+    if args.prefill_chunk_tokens is not None and args.cache != "paged":
+        raise SystemExit("repro-serve: --prefill-chunk-tokens requires "
+                         "--cache paged (chunked prefill writes through the "
+                         "block table)")
     backend = EngineBackend.create(
         params, cfg, slots=args.slots, max_context=args.max_context,
         cache=args.cache, blocks=args.blocks, block_size=args.block_size,
-        request_timeout=args.request_timeout, prefix_cache=prefix_cache)
+        request_timeout=args.request_timeout, prefix_cache=prefix_cache,
+        prefill_chunk_tokens=args.prefill_chunk_tokens)
     # echo the effective memory budget: the sizing knobs' consequence
     eng = backend.engine
     mem = eng.pool_stats()
@@ -476,9 +481,11 @@ def _build_backend(args):
               f"(pool, {eng.slots} slots admitted by free-block budget)"
               if eng.paged else
               f"{eng.slots} slots x {eng.max_context} dense ring")
+    chunk = (f"chunked prefill {args.prefill_chunk_tokens} tok/tick"
+             if args.prefill_chunk_tokens else "monolithic prefill")
     print(f"repro-serve: engine KV cache [{args.cache}] = "
           f"{mem['cache_bytes'] / 1e6:.1f} MB — {budget}; "
-          f"prefix cache {'on' if prefix_cache else 'off'}; "
+          f"prefix cache {'on' if prefix_cache else 'off'}; {chunk}; "
           f"request timeout {args.request_timeout:.0f}s")
     return backend
 
@@ -523,6 +530,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false",
                     help="disable the prefix index")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    metavar="N",
+                    help="--cache paged: prefill prompts in N-token chunks "
+                         "interleaved with decode ticks instead of one "
+                         "monolithic pass (N must be a multiple of "
+                         "--block-size; bit-identical outputs either way)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--request-timeout", type=float, default=300.0,
                     help="seconds before an in-flight request is expired "

@@ -9,7 +9,7 @@ import pytest
 from hypcompat import given, settings, st
 
 from repro.kernels import (flash_attention, paged_decode_attention, ssd_intra,
-                           tte_sample)
+                           suffix_prefill_attention, tte_sample)
 from repro.kernels import ref
 
 # ---------------------------------------------------------------------------
@@ -147,6 +147,69 @@ def test_paged_decode_skips_unallocated_blocks(key):
     v2 = v_pool.at[0].set(1e9)
     out2 = paged_decode_attention(q, k2, v2, table, pos, step)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# suffix prefill attention (chunked prefill over cached context)
+# ---------------------------------------------------------------------------
+SUFFIX_CASES = [
+    # (B, Sc, C, Hkv, G, hd, window, dtype)
+    (1, 16, 0, 1, 1, 32, None, jnp.float32),     # chunk at the prompt head
+    (2, 16, 32, 2, 2, 32, None, jnp.float32),    # GQA mid-prompt chunk
+    (1, 8, 24, 1, 4, 64, None, jnp.float32),     # strong GQA
+    (2, 16, 16, 2, 1, 16, 12, jnp.float32),      # sliding window
+    (1, 16, 32, 2, 2, 32, None, jnp.bfloat16),   # bf16 cache
+]
+
+
+@pytest.mark.parametrize("B,Sc,C,Hkv,G,hd,window,dtype", SUFFIX_CASES)
+def test_suffix_prefill_vs_ref(key, B, Sc, C, Hkv, G, hd, window, dtype):
+    """suffix_prefill_attention vs ref.suffix_prefill_attention_ref over
+    right-padded contexts (trash slots = pos -1) and padded chunk tails."""
+    ks = jax.random.split(key, 5)
+    Hq = Hkv * G
+    q = jax.random.normal(ks[0], (B, Sc, Hq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sc, Hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sc, Hkv, hd)).astype(dtype)
+    ctx_k = jax.random.normal(ks[3], (B, C, Hkv, hd)).astype(dtype)
+    ctx_v = jax.random.normal(ks[4], (B, C, Hkv, hd)).astype(dtype)
+    n_ctx = max(C - 3, 0)
+    n_q = Sc - 2
+    ctx_pos = np.full((B, C), -1, np.int32)
+    ctx_pos[:, :n_ctx] = np.arange(n_ctx)
+    q_pos = np.full((B, Sc), -1, np.int32)
+    q_pos[:, :n_q] = n_ctx + np.arange(n_q)
+    out = suffix_prefill_attention(q, k, v, ctx_k, ctx_v,
+                                   jnp.asarray(q_pos), jnp.asarray(ctx_pos),
+                                   window=window, q_per_kv=G)
+    r = ref.suffix_prefill_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        ctx_k.astype(jnp.float32), ctx_v.astype(jnp.float32),
+        jnp.asarray(q_pos), jnp.asarray(ctx_pos), window=window, q_per_kv=G)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out[:, :n_q], np.float32),
+                               np.asarray(r[:, :n_q]), atol=atol)
+
+
+def test_suffix_prefill_composes_with_flash(key):
+    """A mid-prompt suffix chunk attending over its prefix-as-context must
+    equal the same rows of ONE full flash_attention pass over the whole
+    prompt — the invariant that makes chunked prefill a pure scheduling
+    change."""
+    B, S, C, H, hd = 1, 48, 32, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    full = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=True)
+    pos = jnp.arange(S)[None]
+    out = suffix_prefill_attention(q[:, C:], k[:, C:], v[:, C:],
+                                   k[:, :C], v[:, :C],
+                                   pos[:, C:], pos[:, :C])
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(full.transpose(0, 2, 1, 3)[:, C:]), atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

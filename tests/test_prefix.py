@@ -14,7 +14,8 @@ from repro.configs import get_config
 from repro.core import (engine_oracle_trajectories, futures_risk_items,
                         init_delphi, monte_carlo_risk)
 from repro.serve import (BatchedEngine, BlockAllocator, PrefixIndex, Request,
-                         SharedBlockPool, ring_reference_futures)
+                         SharedBlockPool, chunked_reference_trajectory,
+                         ring_reference_futures)
 
 W, BS, K = 64, 16, 4          # shared geometry -> shared jit cache
 
@@ -523,6 +524,205 @@ def test_cow_failure_mid_fork_leaks_no_blocks(setup, monkeypatch):
     assert any(isinstance(k.error, RuntimeError)
                and "injected COW failure" in str(k.error) for k in kids)
     assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (prefill/decode interleaving) + partial-prefix suffix
+# ---------------------------------------------------------------------------
+LONG_TOKS = (np.arange(3, 24) % 90).astype(np.int32)     # S=21: full + tail
+LONG_AGES = np.linspace(0.0, 30.0, 21).astype(np.float32)
+
+
+def _one(eng, toks, ages, max_new, u):
+    r = Request(tokens=toks, ages=ages, max_new=max_new, uniforms=u)
+    eng.submit(r)
+    eng.run()
+    assert r.done and r.error is None
+    return list(r.out_tokens), [np.float32(a) for a in r.out_ages]
+
+
+def test_chunked_prefill_bit_identical_to_monolithic(setup):
+    """Chunked prefill is a scheduling change, not a numeric one: a budget
+    covering any prompt (= monolithic cadence) and a one-block budget both
+    reproduce the unchunked engine bit for bit (tokens AND fp32 ages) under
+    injected uniforms — and all three match the straight-line chunked
+    oracle (acceptance: bit-parity invariant)."""
+    params, cfg = setup
+    max_new = 6
+    u = _uniforms(1, max_new, cfg.vocab_size, seed=23)[0]
+    u[:, cfg.death_token] = 1e-12        # run all max_new events
+
+    def run(**kw):
+        eng = BatchedEngine(params, cfg, slots=K, max_context=W,
+                            cache="paged", block_size=BS, **kw)
+        out = _one(eng, LONG_TOKS, LONG_AGES, max_new, u)
+        assert eng.allocator.used == 0 and not eng.pool._refs
+        return out, eng
+
+    base, _ = run()
+    inf, _ = run(prefill_chunk_tokens=W)
+    chunked, eng16 = run(prefill_chunk_tokens=BS)
+    assert inf == base, "unbounded chunk budget diverged from monolithic"
+    assert chunked == base, "one-block chunk budget diverged from monolithic"
+    st = eng16.pool_stats()
+    assert st["prefill_chunk_tokens"] == BS
+    assert st["chunked_prefills"] == 1 and st["prefill_chunks"] == 2
+    assert st["suffix_tokens_saved"] == 0 and st["prefill_in_progress"] == 0
+    ot, oa = chunked_reference_trajectory(
+        params, cfg, LONG_TOKS, LONG_AGES, max_new=max_new, uniforms=u,
+        chunk_tokens=BS, slots=K, max_context=W, block_size=BS)
+    assert base == (ot, [np.float32(a) for a in oa]), \
+        "engine diverged from the chunked oracle"
+
+
+def test_partial_prefix_hit_prefills_only_suffix(setup):
+    """A partial index hit acquires the matched blocks by reference and
+    chunk-prefills ONLY the unmatched suffix: suffix_tokens_saved counts
+    the skipped prefix, one extra chunk covers the 5-token tail, and the
+    trajectory matches the matched-boundary oracle bit for bit."""
+    params, cfg = setup
+    max_new = 4
+    eng = BatchedEngine(params, cfg, slots=K, max_context=W, cache="paged",
+                        block_size=BS, prefix_cache=True,
+                        prefill_chunk_tokens=BS)
+    ua = _uniforms(1, max_new, cfg.vocab_size, seed=5)[0]
+    ua[:, cfg.death_token] = 1e-12
+    # registrant: block-aligned prompt -> one full shareable block
+    _one(eng, LONG_TOKS[:BS], LONG_AGES[:BS], max_new, ua)
+    assert eng.prefix.entries >= 1
+    chunks0 = eng.pool_stats()["prefill_chunks"]
+    ub = _uniforms(1, max_new, cfg.vocab_size, seed=6)[0]
+    ub[:, cfg.death_token] = 1e-12
+    got = _one(eng, LONG_TOKS, LONG_AGES, max_new, ub)
+    st = eng.pool_stats()
+    assert st["suffix_tokens_saved"] == BS
+    assert st["prefix_cache"]["partial_hits"] == 1
+    assert st["prefill_chunks"] == chunks0 + 1      # suffix = one chunk
+    ot, oa = chunked_reference_trajectory(
+        params, cfg, LONG_TOKS, LONG_AGES, max_new=max_new, uniforms=ub,
+        chunk_tokens=BS, slots=K, max_context=W, block_size=BS,
+        matched_tokens=BS)
+    assert got == (ot, [np.float32(a) for a in oa]), \
+        "suffix prefill diverged from the matched-boundary oracle"
+    eng.drop_prefix_cache()
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+def test_preempted_chunked_resume_reacquires_prefix(setup):
+    """The chunked twin of test_preempt_lands_on_fork_and_reacquires_prefix:
+    pool exhaustion preempts a forked future, and its recompute-resume goes
+    back through chunked admission — re-acquiring the shared prefix by
+    reference and re-prefilling ONLY the unmatched suffix (counted by
+    suffix_tokens_saved)."""
+    params, cfg = setup
+    S = 16                               # exactly 2 full blocks at BS=8
+    toks = (np.arange(3, 3 + S) % 90).astype(np.int32)
+    ages = np.linspace(0.0, 30.0, S).astype(np.float32)
+    u = _uniforms(3, 12, cfg.vocab_size, seed=7)
+    u[:, :, cfg.death_token] = 1e-12
+    eng = BatchedEngine(params, cfg, slots=4, max_context=32, cache="paged",
+                        block_size=8, blocks=7, prefix_cache=True,
+                        prefill_chunk_tokens=8)
+    kids = eng.sample_futures(toks, ages, n=3, max_new=12, uniforms=u)
+    assert all(k.done and k.error is None for k in kids)
+    assert [len(k.out_tokens) for k in kids] == [12, 12, 12]
+    assert eng.preemptions > 0
+    st = eng.pool_stats()
+    assert st["prefix_cache"]["partial_hits"] > 0, \
+        "resumed fork must re-acquire its prefix by reference"
+    assert st["suffix_tokens_saved"] > 0, \
+        "resume must skip the matched prefix and prefill only the suffix"
+    # bit-parity with the unchunked engine through the same preemption dance
+    ref_eng = BatchedEngine(params, cfg, slots=4, max_context=32,
+                            cache="paged", block_size=8, blocks=7,
+                            prefix_cache=True)
+    assert _trajs(kids) == _trajs(ref_eng.sample_futures(
+        toks, ages, n=3, max_new=12, uniforms=u))
+    eng.drop_prefix_cache()
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+def test_cancel_mid_prefill_releases_partial_blocks(setup):
+    """Cancelling a slot whose prompt is still chunking must release its
+    partially-written blocks AND its shared prefix refs — the zero-leak
+    invariant extended to prefill-in-progress state."""
+    params, cfg = setup
+    bs = 8
+    eng = BatchedEngine(params, cfg, slots=4, max_context=32, cache="paged",
+                        block_size=bs, blocks=8, prefix_cache=True,
+                        prefill_chunk_tokens=bs)
+    toks_a = (np.arange(3, 3 + bs) % 90).astype(np.int32)
+    ages_a = np.linspace(0.0, 10.0, bs).astype(np.float32)
+    ua = _uniforms(1, 2, cfg.vocab_size, seed=31)[0]
+    ua[:, cfg.death_token] = 1e-12
+    _one(eng, toks_a, ages_a, 2, ua)     # registers one shareable block
+    assert eng.prefix.entries == 1
+    toks_b = np.concatenate([toks_a,
+                             np.arange(60, 76) % 90]).astype(np.int32)
+    ages_b = np.concatenate([ages_a,
+                             np.linspace(11.0, 30.0, 16)]).astype(np.float32)
+    rb = Request(tokens=toks_b, ages=ages_b, max_new=4, request_id="mid")
+    eng.submit(rb)
+    eng.step()                           # admit + first suffix chunk only
+    st = eng.pool_stats()
+    assert st["prefill_in_progress"] == 1
+    assert st["suffix_tokens_saved"] == bs
+    assert eng.cancel("mid")
+    eng.run(max_ticks=50)
+    assert rb.done and isinstance(rb.error, RequestCancelledError)
+    assert eng.pool_stats()["prefill_in_progress"] == 0
+    eng.drop_prefix_cache()
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+def test_fork_from_chunk_prefilled_parent(setup):
+    """hold=True parents park their bootstrap logits at the end of chunked
+    prefill exactly as monolithic admission does: sample_futures through a
+    chunked engine == the unchunked fork run, bit for bit."""
+    params, cfg = setup
+    n, max_new = 3, 5
+    u = _uniforms(n, max_new, cfg.vocab_size, seed=13)
+    ora = _trajs(BatchedEngine(
+        params, cfg, slots=K, max_context=W, cache="paged",
+        block_size=BS).sample_futures(TOKS, AGES, n=n, max_new=max_new,
+                                      uniforms=u))
+    eng = BatchedEngine(params, cfg, slots=K, max_context=W, cache="paged",
+                        block_size=BS, prefill_chunk_tokens=BS)
+    assert _trajs(eng.sample_futures(TOKS, AGES, n=n, max_new=max_new,
+                                     uniforms=u)) == ora
+    assert eng.pool_stats()["chunked_prefills"] == 1
+    assert eng.allocator.used == 0 and not eng.pool._refs
+
+
+def test_chunked_knob_validation(setup):
+    params, cfg = setup
+    with pytest.raises(ValueError, match="requires the paged KV cache"):
+        BatchedEngine(params, cfg, cache="ring", prefill_chunk_tokens=16)
+    with pytest.raises(ValueError, match="positive multiple"):
+        BatchedEngine(params, cfg, cache="paged", block_size=BS,
+                      prefill_chunk_tokens=BS + 1)
+    with pytest.raises(ValueError, match="positive multiple"):
+        BatchedEngine(params, cfg, cache="paged", block_size=BS,
+                      prefill_chunk_tokens=0)
+
+
+def test_healthz_exposes_chunked_prefill(setup):
+    from repro.api.remote import RemoteBackend
+    from repro.serve.server import InferenceServer
+    params, cfg = setup
+    server = InferenceServer(
+        EngineBackend.create(params, cfg, slots=2, max_context=W,
+                             cache="paged", block_size=BS, prefix_cache=True,
+                             prefill_chunk_tokens=2 * BS), port=0).start()
+    try:
+        rb = RemoteBackend(server.address)
+        mem = rb.healthz()["engine"]["memory"]
+        assert mem["prefill_chunk_tokens"] == 2 * BS
+        for key in ("chunked_prefills", "prefill_chunks",
+                    "prefill_in_progress", "suffix_tokens_saved"):
+            assert mem[key] == 0
+    finally:
+        server.stop()
 
 
 # ---------------------------------------------------------------------------
