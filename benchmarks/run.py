@@ -35,6 +35,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                     mixed generate/futures load (req/s +
                                     latency tails; 2x row asserts >= 1.5x
                                     the 1-replica req/s)
+  cohort_sweep / cohort_*           cohort-scale scenario engine: 1000
+                                    patients x 4 futures through the paged +
+                                    prefix-cached engine, bit-identical to
+                                    the straight-line foreground oracle;
+                                    counterfactual re-fork amortization and
+                                    shared-vs-naive resident KV (rows append
+                                    to BENCH_cohort.json)
   roofline_*                        derived = dominant roofline term (reads
                                     experiments/dryrun; skipped when absent)
 
@@ -848,6 +855,194 @@ def bench_roofline():
                  if a["useful_ratio"] else f"dominant={a['dominant']}")
 
 
+def _bench_cohort_record(mode: str, config: dict, metrics: dict) -> None:
+    """Append one machine-readable record to BENCH_cohort.json (JSON
+    lines, schema 1 — same append-only discipline as BENCH_serve.json)."""
+    import json
+    path = os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "BENCH_cohort.json")
+    rec = {"schema": 1, "bench": "cohort", "mode": mode,
+           "git_rev": _git_rev(), "timestamp": round(time.time(), 1),
+           "config": config, "metrics": metrics}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def bench_cohort():
+    """Cohort-scale scenario analysis: a 1000-patient x 4-futures sweep
+    through the paged + prefix-cached engine via the ``ScenarioEngine``
+    scheduler, verified **bit-identical** to the straight-line per-patient
+    foreground oracle (which doubles as the naive no-scheduler baseline
+    timing).  Then the counterfactual workload: K edited arms re-forked
+    off one long history's cached prefix vs the same arms with the prefix
+    cache off (every arm re-prefills) — the amortization factor the
+    counterfactual API exists for.  Rows append to BENCH_cohort.json."""
+    from repro.api.client import EngineBackend
+    from repro.cohort import (CounterfactualEdit, ScenarioEngine,
+                              apply_edit, assert_sweep_parity)
+    from repro.configs import get_config
+    from repro.data.synthetic import SimulatorConfig, patient
+    from repro.models import init_params
+
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=1289, max_age=1e9)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_patients, n_fut, max_new, S = 1000, 4, 8, 8
+    W, bs, slots = 64, 8, 8
+    sim = SimulatorConfig(seed=7)
+    pats, i = [], 0
+    while len(pats) < n_patients:       # O(1) access: no split materialized
+        tok, age = patient(i, sim)
+        i += 1
+        if len(tok) > S:                # uniform prompt shape: one prefill
+            pats.append((tok[:S], age[:S]))     # bucket, one oracle shape
+
+    def make_backend():
+        return EngineBackend.create(params, cfg, slots=slots,
+                                    max_context=W, cache="paged",
+                                    block_size=bs, blocks=256,
+                                    prefix_cache=True)
+
+    se = ScenarioEngine(make_backend(), max_in_flight=4, seed=13)
+    se.sweep(pats[:2], n_futures=n_fut, max_new=max_new)   # warm the jits
+    se = ScenarioEngine(make_backend(), max_in_flight=4, seed=13)
+    res = se.sweep(pats, n_futures=n_fut, max_new=max_new, horizon=10.0)
+    assert res.n_failed == 0, f"{res.n_failed} patients failed"
+
+    t0 = time.perf_counter()
+    stats = assert_sweep_parity(res, params, cfg, pats, seed=13,
+                                n_futures=n_fut, max_new=max_new,
+                                horizon=10.0, slots=slots, max_context=W)
+    dt_oracle = time.perf_counter() - t0
+    assert stats["patients_checked"] == n_patients
+    naive_ps = n_patients / dt_oracle   # straight-line foreground baseline
+    _row("cohort_sweep", res.wall_s * 1e6 / n_patients,
+         f"{res.patients_per_s:.1f} patients/s ({res.events_per_s:.1f} "
+         f"events/s, prefix hit rate {res.prefix_hit_rate:.2f}), "
+         f"{stats['events_checked']} events bit-identical to oracle at "
+         f"{naive_ps:.1f} patients/s foreground")
+
+    # shared-vs-naive resident KV for one patient's N futures (the same
+    # invariant bench_futures pins down, here at cohort geometry)
+    from repro.serve import BatchedEngine, Request
+    S_kv = 9 * bs + 1
+    toks = (np.arange(3, 3 + S_kv) % 1200).astype(np.int32)
+    ages = np.linspace(0.0, 60.0, S_kv).astype(np.float32)
+    Wkv = 128
+
+    def block_bytes(eng):
+        pc = eng.cache["self"]
+        per = (pc.k.size + pc.v.size) // pc.k.shape[1]
+        return per * pc.k.dtype.itemsize
+
+    eng = BatchedEngine(params, cfg, slots=n_fut, max_context=Wkv,
+                        cache="paged", block_size=bs, blocks=128)
+    eng.sample_futures(toks, ages, n=n_fut, max_new=max_new)
+    eng.allocator.peak_used = 0
+    eng.sample_futures(toks, ages, n=n_fut, max_new=max_new)
+    bytes_shared = eng.allocator.peak_used * block_bytes(eng)
+    eng2 = BatchedEngine(params, cfg, slots=n_fut, max_context=Wkv,
+                         cache="paged", block_size=bs, blocks=128)
+    for _ in range(2):                  # second pass is the measured one
+        eng2.allocator.peak_used = 0
+        for _ in range(n_fut):
+            eng2.submit(Request(tokens=toks.copy(), ages=ages.copy(),
+                                max_new=max_new))
+        eng2.run()
+    bytes_naive = eng2.allocator.peak_used * block_bytes(eng2)
+    kv_ratio = bytes_naive / max(bytes_shared, 1)
+
+    # counterfactual amortization: K edited arms off one long history.
+    # Shared = the counterfactual API (forked futures + prefix-cache
+    # re-fork of the baseline's blocks).  Naive = what a user without the
+    # API pays: every arm's N futures as N independent requests, each
+    # re-prefilling the full history and holding its own KV.
+    S_cf = 120
+    cf_fut, cf_new = 8, 4
+    rng = np.random.default_rng(5)
+    ctoks = np.concatenate([[3], rng.choice(
+        np.arange(13, 1289), S_cf - 1, replace=False)]).astype(np.int32)
+    cages = np.concatenate([[0.0], np.sort(
+        rng.uniform(1.0, 60.0, S_cf - 1))]).astype(np.float32)
+    edits = [CounterfactualEdit("substitute", int(ctoks[-1 - k]),
+                                new_code=int(1288 - k)) for k in range(6)]
+    arms = [(ctoks, cages)]
+    for e in edits:
+        t2, a2, _ = apply_edit(ctoks, cages, e)
+        arms.append((t2, a2))
+
+    def run_cf_shared():
+        be = EngineBackend.create(params, cfg, slots=cf_fut,
+                                  max_context=256, cache="paged",
+                                  block_size=bs, blocks=512,
+                                  prefix_cache=True)
+        eng_cf = ScenarioEngine(be, seed=4)
+        eng_cf.counterfactual(ctoks, cages, edits[:1], n_futures=cf_fut,
+                              max_new=cf_new)            # warm the jits
+        be.engine.drop_prefix_cache()
+        t0 = time.perf_counter()
+        reps = eng_cf.counterfactual(ctoks, cages, edits,
+                                     n_futures=cf_fut, max_new=cf_new)
+        dt = time.perf_counter() - t0
+        ev = sum(len(t.tokens) for t in reps[0].baseline.trajectories)
+        ev += sum(len(t.tokens) for r in reps
+                  for t in r.edited.trajectories)
+        return ev / dt, reps
+
+    def run_cf_naive():
+        eng_cf = BatchedEngine(params, cfg, slots=cf_fut, max_context=256,
+                               cache="paged", block_size=bs, blocks=512)
+
+        def drive():
+            ev = 0
+            for at, aa in arms:
+                rs = [Request(tokens=np.asarray(at).copy(),
+                              ages=np.asarray(aa).copy(), max_new=cf_new)
+                      for _ in range(cf_fut)]
+                for r in rs:
+                    eng_cf.submit(r)
+                eng_cf.run()
+                ev += sum(len(r.out_tokens) for r in rs)
+            return ev
+        drive()                                          # warm the jits
+        t0 = time.perf_counter()
+        ev = drive()
+        return ev / (time.perf_counter() - t0)
+
+    eps_shared, reps = run_cf_shared()
+    eps_naive = run_cf_naive()
+    amort = eps_shared / max(eps_naive, 1e-9)
+    assert all(r.shared_prefix_len >= S_cf - 7 for r in reps)
+    assert amort >= 2.0, \
+        f"counterfactual amortization {amort:.2f}x < 2x over naive"
+    _row("cohort_counterfactual", 0.0,
+         f"{amort:.2f}x events/s re-forking {len(edits)} arms off the "
+         f"cached prefix vs unshared per-future requests "
+         f"({eps_shared:.1f} vs {eps_naive:.1f} events/s, S={S_cf}, "
+         f"N={cf_fut})")
+    _row("cohort_resident_kv", 0.0,
+         f"{kv_ratio:.1f}x less resident KV, fork-shared futures vs "
+         f"naive N requests (N={n_fut}, S={S_kv})")
+    _bench_cohort_record(
+        "sweep",
+        {"n_patients": n_patients, "n_futures": n_fut, "max_new": max_new,
+         "prompt_events": S, "slots": slots, "max_context": W,
+         "block_size": bs, "blocks": 256, "max_in_flight": 4,
+         "vocab_size": cfg.vocab_size},
+        {"patients_per_s": round(res.patients_per_s, 2),
+         "events_per_s": round(res.events_per_s, 2),
+         "prefix_hit_rate": round(res.prefix_hit_rate, 4),
+         "events_total": res.events_total,
+         "oracle_patients_per_s": round(naive_ps, 2),
+         "oracle_events_checked": stats["events_checked"],
+         "resident_kv_shared_bytes": int(bytes_shared),
+         "resident_kv_naive_bytes": int(bytes_naive),
+         "resident_kv_ratio": round(kv_ratio, 2),
+         "counterfactual_amortization": round(amort, 2),
+         "counterfactual_events_per_s": round(eps_shared, 2),
+         "counterfactual_naive_events_per_s": round(eps_naive, 2)})
+
+
 BENCHES = {
     "portability": bench_runtime_portability,
     "trajectory": bench_trajectory_generation,
@@ -860,6 +1055,7 @@ BENCHES = {
     "http_keepalive": bench_http_keepalive,
     "router": bench_router,
     "calibration": bench_calibration,
+    "cohort": bench_cohort,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,153 @@
+"""CI guard: cohort sweep bit-parity + privacy audit over the HTTP wire.
+
+Two acceptance checks of the cohort/privacy subsystem, end to end:
+
+1. **Cohort parity** — a concurrent ``ScenarioEngine`` sweep through the
+   paged + prefix-cached batching engine is *bit-identical*, patient for
+   patient and event for event, to the straight-line per-patient
+   foreground oracle (``monte_carlo_risk`` over
+   ``ring_reference_futures``) under the same injected uniforms; a
+   paired counterfactual re-forks from the shared history prefix and
+   actually hits the engine's prefix index.
+
+2. **Privacy audit round-trip** — train a tiny Delphi with member
+   canaries planted (``inject_canaries``), serve it over HTTP, and run
+   the ``repro-audit`` CLI against the URL: the report must come back
+   machine-readable with a sane membership-inference AUC + CI and
+   extraction rates.  This is the paper's privacy axis made measurable
+   in CI: the exact pipeline a deployment would run against its own
+   serving endpoint.
+
+Run:  PYTHONPATH=src python scripts/cohort_audit_roundtrip.py
+"""
+import argparse
+import json
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.api.client import EngineBackend, LocalBackend
+from repro.cohort import (CounterfactualEdit, ScenarioEngine,
+                          assert_sweep_parity)
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.data import (SimulatorConfig, batches, generate_dataset,
+                        pack_trajectories)
+from repro.privacy import inject_canaries, make_canaries
+from repro.privacy.audit import main as audit_main
+from repro.serve.server import InferenceServer
+from repro.train import OptimizerConfig, train_loop
+
+W, BS, K = 64, 16, 4      # the paged-parity engine geometry
+
+
+def check_cohort_parity() -> None:
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=96, max_seq_len=48, max_age=1e9)
+    params = init_delphi(cfg, jax.random.PRNGKey(7))
+    pats = []
+    for i in range(6):
+        rng = np.random.default_rng(500 + i)
+        S = 6
+        toks = np.concatenate([[3], rng.integers(13, 90, S - 1)])
+        ages = np.concatenate([[0.0], np.sort(rng.uniform(1.0, 40.0,
+                                                          S - 1))])
+        pats.append((toks.astype(np.int32), ages.astype(np.float32)))
+
+    be = EngineBackend.create(params, cfg, slots=K, max_context=W,
+                              cache="paged", block_size=BS, blocks=64,
+                              prefix_cache=True)
+    se = ScenarioEngine(be, max_in_flight=3, seed=21)
+    res = se.sweep(pats, n_futures=3, max_new=8, horizon=20.0)
+    assert res.n_failed == 0, f"sweep failures: {res.n_failed}"
+    stats = assert_sweep_parity(res, params, cfg, pats, seed=21,
+                                n_futures=3, max_new=8, horizon=20.0,
+                                slots=K, max_context=W)
+    print(f"[1/2] cohort parity: {stats['patients_checked']} patients, "
+          f"{stats['events_checked']} events bit-identical to the "
+          f"foreground oracle (prefix hit rate "
+          f"{res.prefix_hit_rate:.2f})")
+
+    # counterfactual arms must re-fork from the baseline's cached prefix
+    rng = np.random.default_rng(999)
+    S = 20
+    toks = np.concatenate([[3], rng.choice(np.arange(13, 90), S - 1,
+                                           replace=False)]).astype(np.int32)
+    ages = np.concatenate([[0.0], np.sort(
+        rng.uniform(1.0, 40.0, S - 1))]).astype(np.float32)
+    be2 = EngineBackend.create(params, cfg, slots=K, max_context=W,
+                               cache="paged", block_size=4, blocks=128,
+                               prefix_cache=True)
+    se2 = ScenarioEngine(be2, seed=3)
+    edits = [CounterfactualEdit("remove", int(toks[-1])),
+             CounterfactualEdit("insert", 44, age=float(ages[-2]))]
+    reps = se2.counterfactual(toks, ages, edits, n_futures=3, max_new=6,
+                              horizon=30.0)
+    pc = be2.engine.pool_stats()["prefix_cache"]
+    hits = pc["hits"] + pc["partial_hits"]
+    assert hits >= len(edits), \
+        f"counterfactual arms missed the prefix cache ({pc})"
+    assert all(r.shared_prefix_len >= S - 2 for r in reps)
+    print(f"      counterfactual: {len(reps)} paired arms, shared prefix "
+          f">= {S - 2}/{S}, prefix-cache hits {hits}")
+
+
+def check_privacy_audit(steps: int) -> None:
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=1289)
+    params = init_delphi(cfg, jax.random.PRNGKey(2))
+    sim = SimulatorConfig(n_train=96, n_val=4, seed=0)
+    train, _ = generate_dataset(sim)
+    canaries = make_canaries(4, sim, seed=0, secret_len=3, prefix_events=6)
+    train = inject_canaries(train, canaries, repeats=8)
+    ti = batches(pack_trajectories(train, 32), 16, seed=0)
+    params, _ = train_loop(params, cfg,
+                           OptimizerConfig(lr=6e-4, total_steps=steps),
+                           ti, objective="delphi", steps=steps,
+                           log_every=max(steps // 2, 1))
+
+    server = InferenceServer(LocalBackend(params, cfg, seq_len=16),
+                             port=0).start()
+    try:
+        with tempfile.NamedTemporaryFile(suffix=".json", mode="r") as f:
+            rc = audit_main(["--url", server.address,
+                             "--canaries", "4", "--secret-len", "3",
+                             "--prefix-events", "6", "--sim-seed", "0",
+                             "--seed", "0", "--n-futures", "2",
+                             "--max-new", "4", "--n-boot", "50",
+                             "--out", f.name])
+            assert rc == 0
+            report = json.load(open(f.name))
+    finally:
+        server.stop()
+
+    assert report["backend"] == "remote"
+    assert report["n_members"] == 2 and report["n_nonmembers"] == 2
+    assert 0.0 <= report["mi_auc"] <= 1.0
+    lo, hi = report["mi_auc_ci"]
+    assert 0.0 <= lo <= hi <= 1.0
+    for k in ("member_extraction_rate", "nonmember_extraction_rate"):
+        assert 0.0 <= report[k] <= 1.0
+    assert len(report["member_scores"]) == 2
+    assert all(s <= 0.0 for s in report["member_scores"])
+    print(f"[2/2] privacy audit over the wire: MI AUC "
+          f"{report['mi_auc']:.2f} [{lo:.2f}, {hi:.2f}], extraction gap "
+          f"{report['extraction_gap']:+.2f} "
+          f"(trained {steps} steps with planted canaries)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80,
+                    help="training steps for the audited model")
+    args = ap.parse_args()
+    check_cohort_parity()
+    check_privacy_audit(args.steps)
+    print("cohort_audit_roundtrip: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Smoke-run every example headlessly with fast arguments.
+
+Each example is a documented entry point; this script is the guard that
+keeps them all runnable (imports, CLI flags, end-to-end wiring) without
+paying their demo-scale training budgets.  Every example runs in its own
+interpreter via subprocess — import-order isolation, and exactly how a
+user invokes them.
+
+Run:  PYTHONPATH=src python scripts/examples_smoke.py [--only quickstart]
+"""
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+#: example file -> fast-args override (keys mirror examples/*.py)
+EXAMPLES = {
+    "quickstart.py": ["--steps", "2", "--patients", "64"],
+    "ablation_dual_loss.py": ["--steps", "2", "--patients", "64"],
+    "serve_batched.py": ["--requests", "4", "--slots", "4",
+                         "--steps", "2", "--max-new", "6"],
+    "export_and_serve.py": [],
+    "federated_finetune.py": ["--clients", "2", "--pretrain-steps", "2",
+                              "--rounds", "1"],
+    "arch_zoo.py": ["--arch", "delphi-2m"],
+    "serve_http.py": ["--port", "0", "--slots", "4"],
+    "cohort_sweep.py": ["--patients", "4", "--futures", "2",
+                        "--max-new", "6", "--steps", "2"],
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="run a single example (stem or file)")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+
+    todo = {k: v for k, v in EXAMPLES.items()
+            if not args.only or args.only in (k, k[:-3])}
+    if not todo:
+        print(f"examples_smoke: no example matches --only {args.only!r}",
+              file=sys.stderr)
+        return 2
+
+    missing = [k for k in todo
+               if not os.path.exists(os.path.join(root, "examples", k))]
+    if missing:
+        print(f"examples_smoke: missing examples: {missing}",
+              file=sys.stderr)
+        return 2
+
+    failures = []
+    for name, extra in todo.items():
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, os.path.join(root, "examples", name)] + extra,
+            env=env, cwd=root, capture_output=True, text=True,
+            timeout=args.timeout)
+        dt = time.time() - t0
+        status = "ok" if proc.returncode == 0 else f"FAIL({proc.returncode})"
+        print(f"  {name:24s} {status:8s} {dt:5.1f}s")
+        if proc.returncode != 0:
+            failures.append(name)
+            sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-2000:])
+    if failures:
+        print(f"examples_smoke: {len(failures)} failed: {failures}",
+              file=sys.stderr)
+        return 1
+    print(f"examples_smoke: all {len(todo)} examples ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -134,16 +134,31 @@ def engine_oracle_trajectories(params, cfg: ModelConfig, tokens, ages, *,
     from repro.serve.prefix import ring_reference_futures   # lazy: core
     toks = np.asarray(tokens)                               # stays below
     ags = np.asarray(ages)                                  # serve
-    S = len(toks)
     futs = ring_reference_futures(
         params, cfg, toks, ags, n=n_samples, max_new=max_new,
         uniforms=uniforms, slots=slots, max_context=max_context, **oracle_kw)
+    return pack_futures_trajectories(toks, ags, futs, max_new=max_new)
+
+
+def pack_futures_trajectories(tokens, ages,
+                              futures: Sequence[Tuple[Sequence[int],
+                                                      Sequence[float]]],
+                              *, max_new: int) -> Dict[str, jax.Array]:
+    """Pack N generated futures (new tokens/ages only, variable length)
+    over one shared (S,) history into the ``generate_trajectories`` output
+    format, so :func:`monte_carlo_risk` can aggregate them via
+    ``trajectories=``.  Shared by the engine bit-parity oracle above and
+    the cohort scenario engine's sweep aggregation."""
+    toks = np.asarray(tokens)
+    ags = np.asarray(ages)
+    S = len(toks)
+    n_samples = len(futures)
     tok_buf = np.zeros((n_samples, S + max_new), np.int64)
     age_buf = np.zeros((n_samples, S + max_new), np.float32)
     alive = np.zeros((n_samples, max_new), bool)
     tok_buf[:, :S] = toks
     age_buf[:, :S] = ags
-    for j, (ts, as_) in enumerate(futs):
+    for j, (ts, as_) in enumerate(futures):
         k = len(ts)
         tok_buf[j, S:S + k] = ts
         age_buf[j, S:S + k] = np.asarray(as_, np.float32)
@@ -151,7 +166,8 @@ def engine_oracle_trajectories(params, cfg: ModelConfig, tokens, ages, *,
         alive[j, :k] = True
     return {"tokens": jnp.asarray(tok_buf), "ages": jnp.asarray(age_buf),
             "alive_mask": jnp.asarray(alive),
-            "n_generated": jnp.asarray([len(t) for t, _ in futs], jnp.int32)}
+            "n_generated": jnp.asarray([len(t) for t, _ in futures],
+                                       jnp.int32)}
 
 
 def futures_risk_items(trajectories: Sequence[Tuple[Sequence[int],
@@ -188,11 +204,48 @@ def futures_risk_items(trajectories: Sequence[Tuple[Sequence[int],
     return [(int(i), float(risk[i])) for i in order]
 
 
-def disease_chapter_map(vocab_size: int):
-    """(V,) chapter index per token (specials/lifestyle -> chapter 0-pad)."""
+def futures_chapter_risk(trajectories: Sequence[Tuple[Sequence[int],
+                                                      Sequence[float]]],
+                         age0: float, horizon: float,
+                         vocab_size: int) -> np.ndarray:
+    """Host-side per-chapter within-horizon risk over N sampled futures:
+    P(chapter) = fraction of futures in which ANY code of the chapter
+    occurs at an age <= age0 + horizon.  Same fp32 cutoff arithmetic as
+    :func:`futures_risk_items` and the same chapter collapse as
+    ``monte_carlo_risk(chapter_of=disease_chapter_map(V))``, so cohort
+    aggregation matches the in-graph ``chapter_risk`` exactly.
+
+    Returns (C,) float64 with index 0 the non-disease bucket and
+    chapters 1.. the ICD chapters (``disease_chapter_map`` convention).
+    """
+    chap = disease_chapter_map_np(vocab_size)
+    C = int(chap.max()) + 1
+    n = max(len(trajectories), 1)
+    cutoff = np.float32(np.float32(age0) + np.float32(horizon))
+    counts = np.zeros(C, np.int64)
+    for toks, ags in trajectories:
+        if ags is not None and len(ags):
+            seen = {int(t) for t, a in zip(toks, ags)
+                    if np.float32(a) <= cutoff}
+        else:
+            seen = {int(t) for t in toks}
+        for c in {int(chap[t]) for t in seen if 0 <= t < vocab_size}:
+            counts[c] += 1
+    return counts / float(n)
+
+
+def disease_chapter_map_np(vocab_size: int) -> np.ndarray:
+    """(V,) chapter index per token (specials/lifestyle -> chapter 0-pad),
+    host-side — the cohort aggregation path, which must stay free of
+    device values (RL006)."""
     from repro.data import vocab as V
-    import numpy as np
     out = np.zeros(vocab_size, np.int32)
     for c in range(V.DISEASE0, min(vocab_size, V.VOCAB_SIZE)):
         out[c] = V.chapter_of(c) + 1     # 0 reserved for non-disease
-    return jnp.asarray(out)
+    return out
+
+
+def disease_chapter_map(vocab_size: int):
+    """Device twin of :func:`disease_chapter_map_np` for
+    ``monte_carlo_risk(chapter_of=...)``."""
+    return jnp.asarray(disease_chapter_map_np(vocab_size))

@@ -1,0 +1,272 @@
+"""Cohort scenario engine: counterfactual edits, bounded-concurrency
+sweeps (bit-parity vs the per-patient foreground oracle), scheduler
+retry/deadline isolation, and result schemas."""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api.client import EngineBackend, LocalBackend
+from repro.api.schemas import (FuturesResult, RiskItem, RiskReport,
+                               TrajectoryResult)
+from repro.cohort import (CounterfactualEdit, ScenarioEngine, apply_edit,
+                          assert_sweep_parity, sweep_uniforms)
+from repro.cohort.engine import _merge_sharing
+from repro.configs import get_config
+from repro.core import init_delphi
+
+W, BS, K = 64, 16, 4          # test_prefix geometry -> shared jit cache
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=96, max_seq_len=48, max_age=1e9)
+    params = init_delphi(cfg, jax.random.PRNGKey(7))
+    return params, cfg
+
+
+def _patients(n, S=5):
+    """Fixed-length synthetic histories (fixed shapes -> one compile)."""
+    out = []
+    for i in range(n):
+        rng = np.random.default_rng(100 + i)
+        toks = np.concatenate([[3], rng.integers(13, 90, S - 1)])
+        ages = np.concatenate([[0.0],
+                               np.sort(rng.uniform(1.0, 40.0, S - 1))])
+        out.append((toks.astype(np.int32), ages.astype(np.float32)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Counterfactual edits
+# ---------------------------------------------------------------------------
+def test_apply_edit_insert_keeps_ages_sorted():
+    toks = [3, 20, 30, 40]
+    ages = [0.0, 10.0, 20.0, 30.0]
+    t2, a2, shared = apply_edit(toks, ages,
+                                CounterfactualEdit("insert", 77, age=15.0))
+    assert t2.tolist() == [3, 20, 77, 30, 40]
+    assert a2.tolist() == [0.0, 10.0, 15.0, 20.0, 30.0]
+    assert shared == 2                      # events before the edit point
+    assert np.all(np.diff(a2) >= 0)
+    # insert past the end shares the whole history
+    t3, a3, s3 = apply_edit(toks, ages,
+                            CounterfactualEdit("insert", 77, age=99.0))
+    assert t3.tolist() == [3, 20, 30, 40, 77] and s3 == 4
+
+
+def test_apply_edit_remove_and_substitute():
+    toks = [3, 20, 30, 40]
+    ages = [0.0, 10.0, 20.0, 30.0]
+    t2, a2, shared = apply_edit(toks, ages,
+                                CounterfactualEdit("remove", 30))
+    assert t2.tolist() == [3, 20, 40] and a2.tolist() == [0.0, 10.0, 30.0]
+    assert shared == 2
+    t3, a3, s3 = apply_edit(
+        toks, ages, CounterfactualEdit("substitute", 20, new_code=55))
+    assert t3.tolist() == [3, 55, 30, 40]
+    assert a3.tolist() == ages and s3 == 1
+
+
+def test_apply_edit_errors():
+    toks, ages = [3, 20], [0.0, 10.0]
+    with pytest.raises(ValueError, match="no occurrence"):
+        apply_edit(toks, ages, CounterfactualEdit("remove", 99))
+    with pytest.raises(ValueError, match="need an age"):
+        apply_edit(toks, ages, CounterfactualEdit("insert", 5))
+    with pytest.raises(ValueError, match="new_code"):
+        apply_edit(toks, ages, CounterfactualEdit("substitute", 20))
+    with pytest.raises(ValueError, match="one of"):
+        apply_edit(toks, ages, CounterfactualEdit("mutate", 20))
+    with pytest.raises(ValueError, match="empty history"):
+        apply_edit([20], [5.0], CounterfactualEdit("remove", 20))
+
+
+def test_edit_json_roundtrip():
+    for e in (CounterfactualEdit("insert", 77, age=15.0),
+              CounterfactualEdit("remove", 30),
+              CounterfactualEdit("substitute", 20, new_code=55)):
+        assert CounterfactualEdit.from_json(
+            json.loads(json.dumps(e.to_json()))) == e
+
+
+def test_sweep_uniforms_deterministic():
+    u1 = sweep_uniforms(3, 17, 4, 6, 96)
+    u2 = sweep_uniforms(3, 17, 4, 6, 96)
+    assert u1.shape == (4, 6, 96) and u1.dtype == np.float32
+    np.testing.assert_array_equal(u1, u2)
+    assert not np.array_equal(u1, sweep_uniforms(3, 18, 4, 6, 96))
+
+
+def test_merge_sharing_takes_cumulative_max():
+    merged = _merge_sharing([
+        {"forks": 2, "prefix_cache": {"hits": 1, "misses": 3}},
+        {"forks": 5, "cow_copies": 1,
+         "prefix_cache": {"hits": 4, "misses": 2}},
+        {"forks": 3, "prefix_cache": {"hits": 2, "misses": 9}},
+    ])
+    assert merged["forks"] == 5 and merged["cow_copies"] == 1
+    assert merged["prefix_cache"] == {"hits": 4, "misses": 9}
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+def test_sweep_engine_bit_parity_with_oracle(setup):
+    """The acceptance gate in miniature: a concurrent sweep through the
+    paged + prefix-cached engine is bit-identical to the per-patient
+    foreground monte_carlo_risk oracle under injected uniforms."""
+    params, cfg = setup
+    pats = _patients(5)
+    be = EngineBackend.create(params, cfg, slots=K, max_context=W,
+                              cache="paged", block_size=BS, blocks=64,
+                              prefix_cache=True)
+    se = ScenarioEngine(be, max_in_flight=3, seed=11)
+    res = se.sweep(pats, n_futures=3, max_new=6, horizon=20.0)
+    assert res.n_failed == 0 and res.n_patients == 5
+    assert res.events_total > 0
+    stats = assert_sweep_parity(res, params, cfg, pats, seed=11,
+                                n_futures=3, max_new=6, horizon=20.0,
+                                slots=K, max_context=W)
+    assert stats["patients_checked"] == 5
+    assert stats["events_checked"] == res.events_total
+
+
+def test_sweep_determinism_across_concurrency(setup):
+    """max_in_flight must be unobservable: per-patient injected uniforms
+    make 1-worker and 3-worker sweeps produce identical results."""
+    params, cfg = setup
+    pats = _patients(4)
+
+    def run(workers):
+        be = EngineBackend.create(params, cfg, slots=K, max_context=W,
+                                  cache="paged", block_size=BS, blocks=64,
+                                  prefix_cache=True)
+        se = ScenarioEngine(be, max_in_flight=workers, seed=5)
+        return se.sweep(pats, n_futures=3, max_new=6, horizon=20.0)
+
+    r1, r3 = run(1), run(3)
+    assert r1.n_failed == r3.n_failed == 0
+    for p1, p3 in zip(r1.results, r3.results):
+        assert [(t.tokens, t.ages) for t in p1.result.trajectories] == \
+               [(t.tokens, t.ages) for t in p3.result.trajectories]
+        np.testing.assert_array_equal(p1.chapter_risk, p3.chapter_risk)
+    np.testing.assert_array_equal(r1.chapter_mean, r3.chapter_mean)
+    np.testing.assert_array_equal(r1.chapter_hist, r3.chapter_hist)
+
+
+def test_sweep_local_backend_and_json(setup):
+    params, cfg = setup
+    pats = _patients(3)
+    se = ScenarioEngine(LocalBackend(params, cfg), max_in_flight=2, seed=2)
+    res = se.sweep(pats, n_futures=2, max_new=5, horizon=20.0, hist_bins=4)
+    assert res.n_failed == 0
+    assert res.chapter_hist.shape == (res.chapter_mean.shape[0], 4)
+    assert res.chapter_hist.sum(axis=1).max() <= res.n_ok
+    d = json.loads(json.dumps(res.to_json()))
+    assert d["n_patients"] == 3 and len(d["patients"]) == 3
+    assert d["events_total"] == res.events_total
+    assert 0.0 <= d["prefix_hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: retry, deadline, failure isolation
+# ---------------------------------------------------------------------------
+class _FlakyBackend:
+    """Fails the first ``fail_n`` attempts per patient, then succeeds."""
+    name = "flaky"
+    vocab_size = 96
+
+    def __init__(self, fail_n=1, hang_index=None):
+        self.fail_n = fail_n
+        self.hang_index = hang_index
+        self.attempts = {}
+        self._lk = threading.Lock()
+
+    def sample_futures(self, req):
+        idx = int(req.request_id.split("-")[1])
+        with self._lk:
+            k = self.attempts[idx] = self.attempts.get(idx, 0) + 1
+        if idx == self.hang_index or k <= self.fail_n:
+            raise RuntimeError(f"flaky failure #{k}")
+        traj = TrajectoryResult(tokens=[15], ages=[1.0],
+                                prompt_tokens=list(req.tokens),
+                                prompt_ages=list(req.ages),
+                                backend=self.name)
+        return FuturesResult(
+            risk=RiskReport(horizon=req.horizon,
+                            items=[RiskItem(token=15, risk=1.0)]),
+            trajectories=[traj] * req.n_futures,
+            n_futures=req.n_futures, backend=self.name)
+
+
+def test_sweep_retries_transient_failures():
+    b = _FlakyBackend(fail_n=1)
+    se = ScenarioEngine(b, max_in_flight=2, seed=0, retries=2)
+    res = se.sweep(_patients(4), n_futures=2, max_new=4)
+    assert res.n_failed == 0
+    assert all(p.retries == 1 for p in res.results)
+    assert all(b.attempts[i] == 2 for i in range(4))
+
+
+def test_sweep_isolates_exhausted_patients():
+    """A patient that keeps failing lands as a structured failure; the
+    rest of the cohort still completes and aggregates."""
+    b = _FlakyBackend(fail_n=0, hang_index=1)
+    se = ScenarioEngine(b, max_in_flight=2, seed=0, retries=1)
+    res = se.sweep(_patients(4), n_futures=2, max_new=4)
+    assert res.n_failed == 1 and res.n_ok == 3
+    bad = res.results[1]
+    assert not bad.ok and "RuntimeError" in bad.error
+    assert b.attempts[1] == 2               # retries + 1 attempts
+    assert res.events_total == 3 * 2        # failed patient contributes 0
+    d = res.to_json()
+    assert d["patients"][1]["ok"] is False and "error" in d["patients"][1]
+
+
+def test_sweep_deadline_caps_retries():
+    b = _FlakyBackend(fail_n=10**9)         # never succeeds
+    se = ScenarioEngine(b, max_in_flight=1, seed=0, retries=50,
+                        patient_deadline=0.0)
+    res = se.sweep(_patients(2), n_futures=2, max_new=4)
+    assert res.n_failed == 2
+    for p in res.results:
+        assert "deadline" in p.error and "0" in p.error
+    assert all(n <= 2 for n in b.attempts.values())
+
+
+# ---------------------------------------------------------------------------
+# Counterfactuals through the engine
+# ---------------------------------------------------------------------------
+def test_counterfactual_paired_reports(setup):
+    """Paired CRN reports: identical uniforms across arms, chapter deltas
+    bounded, edited arm re-forks from the shared prefix (the engine's
+    prefix index sees the reuse)."""
+    params, cfg = setup
+    S = 20                                  # > block, so edits share blocks
+    rng = np.random.default_rng(0)
+    toks = np.concatenate([[3], rng.integers(13, 90, S - 1)]).astype(np.int32)
+    ages = np.concatenate([[0.0], np.sort(
+        rng.uniform(1.0, 40.0, S - 1))]).astype(np.float32)
+    be = EngineBackend.create(params, cfg, slots=K, max_context=W,
+                              cache="paged", block_size=4, blocks=128,
+                              prefix_cache=True)
+    se = ScenarioEngine(be, seed=3)
+    edits = [CounterfactualEdit("insert", 44, age=float(ages[-2])),
+             CounterfactualEdit("substitute", int(toks[-1]), new_code=50)]
+    reps = se.counterfactual(toks, ages, edits, n_futures=3, max_new=5,
+                             horizon=30.0)
+    assert len(reps) == 2
+    for r in reps:
+        assert r.shared_prefix_len >= S - 2
+        assert np.all(np.abs(r.chapter_delta) <= 1.0)
+        assert len(r.baseline.trajectories) == 3
+        d = json.loads(json.dumps(r.to_json()))
+        assert d["shared_prefix_len"] == r.shared_prefix_len
+        assert len(d["chapter_delta"]) == len(r.baseline_chapter)
+    pc = be.engine.pool_stats()["prefix_cache"]
+    # every edited arm's prefill found the baseline's blocks in the index
+    assert pc["hits"] + pc["partial_hits"] >= len(edits)

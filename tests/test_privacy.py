@@ -1,0 +1,194 @@
+"""Privacy audit harness: attack statistics, canary determinism, and an
+end-to-end audit over a real backend."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api.client import LocalBackend
+from repro.api.schemas import (FuturesResult, RiskItem, RiskReport,
+                               TrajectoryResult)
+from repro.configs import get_config
+from repro.core import init_delphi
+from repro.data import vocab as V
+from repro.data.synthetic import SimulatorConfig, hazard_params
+from repro.privacy import (Canary, PrivacyAuditReport, bootstrap_auc_ci,
+                           extraction_probe, extraction_rate,
+                           inject_canaries, make_canaries, membership_score,
+                           rare_code_pool, roc_auc, run_audit,
+                           split_canaries)
+
+
+# ---------------------------------------------------------------------------
+# Attack statistics
+# ---------------------------------------------------------------------------
+def test_roc_auc_units():
+    assert roc_auc([2.0, 3.0], [0.0, 1.0]) == 1.0
+    assert roc_auc([0.0, 1.0], [2.0, 3.0]) == 0.0
+    assert roc_auc([1.0], [1.0]) == 0.5                 # tie -> 0.5
+    assert roc_auc([], [1.0]) == 0.5                    # degenerate
+    assert roc_auc([1.0], []) == 0.5
+    # mixed: pairs (2>1)=1, (2>3)=0, (0>1)=0, (0>3)=0 -> 0.25
+    assert roc_auc([2.0, 0.0], [1.0, 3.0]) == 0.25
+
+
+def test_bootstrap_ci_brackets_and_deterministic():
+    pos = [3.0, 4.0, 5.0, 2.5]
+    neg = [0.0, 1.0, 2.0, 0.5]
+    lo, hi = bootstrap_auc_ci(pos, neg, n_boot=100, seed=7)
+    assert 0.0 <= lo <= hi <= 1.0
+    assert (lo, hi) == bootstrap_auc_ci(pos, neg, n_boot=100, seed=7)
+    assert bootstrap_auc_ci([], [1.0]) == (0.5, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Canaries
+# ---------------------------------------------------------------------------
+def test_canaries_deterministic_and_well_formed():
+    cfg = SimulatorConfig(seed=0)
+    c1 = make_canaries(6, cfg, seed=3, secret_len=4, prefix_events=8)
+    c2 = make_canaries(6, cfg, seed=3, secret_len=4, prefix_events=8)
+    assert len(c1) == 6
+    pool = set(int(V.DISEASE0 + c) for c in rare_code_pool(cfg))
+    a, _, _, _ = hazard_params(cfg)
+    for x, y in zip(c1, c2):
+        np.testing.assert_array_equal(x.tokens, y.tokens)
+        np.testing.assert_array_equal(x.ages, y.ages)
+        assert x.member == (x.index % 2 == 0)
+        assert len(x.secret_tokens) == 4
+        assert set(x.secret_tokens) <= pool
+        assert np.all(np.diff(x.ages) >= 0)             # monotone ages
+        assert V.DEATH not in list(x.prefix_tokens)[1:]  # secret has a future
+        assert x.rarity == pytest.approx(
+            -float(sum(a[t - V.DISEASE0] for t in x.secret_tokens)))
+        assert x.rarity > 0                              # rare => -log h > 0
+    # a different audit seed gives different canaries
+    c3 = make_canaries(6, cfg, seed=4, secret_len=4, prefix_events=8)
+    assert not np.array_equal(c1[0].tokens, c3[0].tokens)
+
+
+def test_rare_pool_is_rarest_by_base_hazard():
+    cfg = SimulatorConfig(seed=0)
+    a, _, _, _ = hazard_params(cfg)
+    pool = rare_code_pool(cfg)
+    assert len(pool) == max(8, int(len(a) * 0.05))
+    assert a[pool].max() <= np.delete(a, pool).min()
+
+
+def test_inject_and_split():
+    cfg = SimulatorConfig(seed=0)
+    canaries = make_canaries(6, cfg, seed=1)
+    members, nonmembers = split_canaries(canaries)
+    assert len(members) == 3 and len(nonmembers) == 3
+    train = [(np.asarray([3, 20], np.int32),
+              np.asarray([0.0, 1.0], np.float32))]
+    out = inject_canaries(train, canaries, repeats=2)
+    assert len(out) == 1 + 3 * 2
+    np.testing.assert_array_equal(out[1][0], members[0].tokens)
+    out[1][0][0] = -1                                   # copies, not views
+    assert members[0].tokens[0] != -1
+
+
+# ---------------------------------------------------------------------------
+# Probes against a rigged backend
+# ---------------------------------------------------------------------------
+class _MemorizingBackend:
+    """Assigns high next-event probability to a member's secret tokens
+    and regurgitates them under sampling; uniform on everything else."""
+    name = "memorizing"
+
+    def __init__(self, members, vocab_size=V.VOCAB_SIZE):
+        self.vocab_size = vocab_size
+        self._known = {tuple(int(t) for t in c.tokens): c for c in members}
+
+    def _lookup(self, tokens):
+        for full, c in self._known.items():
+            k = len(tokens)
+            if k < len(full) and full[:k] == tuple(tokens):
+                return full[k]
+        return None
+
+    def risk(self, tokens, ages, *, horizon, top):
+        nxt = self._lookup([int(t) for t in tokens])
+        if nxt is None:                                 # uniform model
+            p = 1.0 / self.vocab_size
+            items = [RiskItem(token=t, risk=p) for t in range(top)]
+        else:
+            items = [RiskItem(token=nxt, risk=0.9)]
+        return RiskReport(horizon=horizon, items=items)
+
+    def sample_futures(self, req):
+        nxt = self._lookup(list(req.tokens))
+        toks, ages = list(req.tokens), list(req.ages)
+        out_t = []
+        while nxt is not None and len(out_t) < req.max_new:
+            out_t.append(nxt)
+            toks.append(nxt)
+            nxt = self._lookup(toks)
+        traj = TrajectoryResult(
+            tokens=out_t or [V.NO_EVENT],
+            ages=[float(ages[-1]) + i + 1.0
+                  for i in range(len(out_t) or 1)],
+            prompt_tokens=[int(t) for t in req.tokens],
+            prompt_ages=[float(a) for a in req.ages], backend=self.name)
+        return FuturesResult(
+            risk=RiskReport(horizon=req.horizon, items=[]),
+            trajectories=[traj] * req.n_futures,
+            n_futures=req.n_futures, backend=self.name)
+
+
+def test_probes_separate_members_from_heldout():
+    cfg = SimulatorConfig(seed=0)
+    canaries = make_canaries(8, cfg, seed=2)
+    members, nonmembers = split_canaries(canaries)
+    b = _MemorizingBackend(members)
+    for m in members:
+        assert membership_score(b, m) > membership_score(
+            b, nonmembers[0]) + 1.0
+        assert extraction_probe(b, m, n_futures=2, max_new=8, match=2)
+    rate_m, flags = extraction_rate(b, members, n_futures=2, max_new=8)
+    rate_n, _ = extraction_rate(b, nonmembers, n_futures=2, max_new=8)
+    assert rate_m == 1.0 and all(flags) and rate_n == 0.0
+    report = run_audit(b, members, nonmembers, n_futures=2, max_new=8,
+                       n_boot=50)
+    assert report.mi_auc == 1.0
+    assert report.extraction_gap == 1.0
+    assert report.mi_auc_ci[0] <= report.mi_auc <= report.mi_auc_ci[1] \
+        or report.mi_auc_ci == (1.0, 1.0)
+
+
+def test_report_json_roundtrip():
+    r = PrivacyAuditReport(backend="x", n_members=2, n_nonmembers=2,
+                           mi_auc=0.75, mi_auc_ci=(0.5, 1.0),
+                           member_scores=[-1.0, -2.0],
+                           nonmember_scores=[-3.0, -4.0],
+                           member_extraction_rate=0.5,
+                           nonmember_extraction_rate=0.0,
+                           config={"seed": 1})
+    r2 = PrivacyAuditReport.from_json(json.loads(json.dumps(r.to_json())))
+    assert r2 == r
+    assert r.to_json()["extraction_gap"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# End-to-end over a real (untrained) model
+# ---------------------------------------------------------------------------
+def test_run_audit_local_backend_smoke():
+    """An untrained model should sit near chance: the audit machinery
+    must run through the full public surface and return sane numbers."""
+    cfg = get_config("delphi-2m", reduced=True).replace(
+        dtype="float32", vocab_size=1289)
+    params = init_delphi(cfg, jax.random.PRNGKey(2))
+    backend = LocalBackend(params, cfg)
+    canaries = make_canaries(4, SimulatorConfig(seed=0), seed=0,
+                             secret_len=3, prefix_events=4)
+    members, nonmembers = split_canaries(canaries)
+    report = run_audit(backend, members, nonmembers, n_futures=2,
+                       max_new=4, n_boot=25)
+    assert report.n_members == 2 and report.n_nonmembers == 2
+    assert 0.0 <= report.mi_auc <= 1.0
+    assert all(s < 0 for s in report.member_scores + report.nonmember_scores)
+    assert 0.0 <= report.member_extraction_rate <= 1.0
+    d = report.to_json()
+    assert d["backend"] == backend.name and d["config"]["n_boot"] == 25

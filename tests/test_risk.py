@@ -78,3 +78,76 @@ def test_calibration_harness(delphi):
     rep = calibration_report(params, cfg, held, n_batches=1)
     assert 0.0 <= rep["chapter_l1"] <= 2.0
     assert rep["data"]["events_per_year"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Host futures aggregation (cohort path) — edge cases
+# ---------------------------------------------------------------------------
+def test_futures_risk_items_edges():
+    from repro.core.risk import futures_risk_items
+    # no trajectories at all -> all-zero risks, still top-k shaped
+    items = futures_risk_items([], 50.0, 5.0, vocab_size=10, top=3)
+    assert len(items) == 3 and all(r == 0.0 for _, r in items)
+    # empty futures and all-censored futures contribute nothing
+    items = futures_risk_items(
+        [([], []), ([7, 8], [99.0, 100.0])], 50.0, 5.0, vocab_size=10)
+    assert all(r == 0.0 for _, r in items)
+    # numpy-array ages and fp32 boundary: age exactly at cutoff counts
+    toks = np.asarray([4, 5], np.int32)
+    ags = np.asarray([55.0, 55.0000001], np.float32)     # == cutoff in fp32
+    items = dict(futures_risk_items([(toks, ags)], 50.0, 5.0,
+                                    vocab_size=10, top=10))
+    assert items[4] == 1.0
+    cutoff = np.float32(np.float32(50.0) + np.float32(5.0))
+    assert items[5] == (1.0 if np.float32(ags[1]) <= cutoff else 0.0)
+    # ages=None counts every token; out-of-vocab tokens are dropped
+    items = dict(futures_risk_items([([2, 3, 42], None)], 0.0, 1.0,
+                                    vocab_size=10, top=10))
+    assert items[2] == 1.0 and items[3] == 1.0 and 42 not in items
+
+
+def test_futures_chapter_risk_hand_example():
+    from repro.core.risk import disease_chapter_map_np, futures_chapter_risk
+    V_ = 1289
+    chap = disease_chapter_map_np(V_)
+    c20, c700 = int(chap[20]), int(chap[700])
+    assert c20 != 0 and c700 != 0 and c20 != c700
+    futs = [([20, 700], [51.0, 52.0]),      # both chapters
+            ([20, 21], [51.0, 52.0]),       # same chapter twice -> counts 1
+            ([700], [99.0]),                # censored (past cutoff)
+            ([1], [51.0])]                  # DEATH -> chapter 0 bucket
+    r = futures_chapter_risk(futs, 50.0, 5.0, V_)
+    assert r.shape == (27,)
+    assert r[c20] == 0.5 and r[c700] == 0.25 and r[0] == 0.25
+    assert futures_chapter_risk([], 50.0, 5.0, V_).sum() == 0.0
+
+
+def test_disease_chapter_map_edges():
+    from repro.core.risk import disease_chapter_map, disease_chapter_map_np
+    from repro.data import vocab as V
+    m = disease_chapter_map_np(1289)
+    assert m.dtype == np.int32 and m.shape == (1289,)
+    assert np.all(m[:V.DISEASE0] == 0)                  # specials/lifestyle
+    assert m[V.DISEASE0] == 1 and m.max() == 26
+    np.testing.assert_array_equal(np.asarray(disease_chapter_map(1289)), m)
+    # truncated vocab (reduced configs) stays consistent
+    m96 = disease_chapter_map_np(96)
+    np.testing.assert_array_equal(m96, m[:96])
+
+
+def test_pack_futures_trajectories_shapes():
+    from repro.core.risk import pack_futures_trajectories
+    toks = np.asarray([3, 20, 30], np.int32)
+    ags = np.asarray([0.0, 10.0, 20.0], np.float32)
+    futs = [([40, 50], [21.0, 22.0]), ([], [])]
+    p = pack_futures_trajectories(toks, ags, futs, max_new=4)
+    assert p["tokens"].shape == (2, 7) and p["ages"].shape == (2, 7)
+    np.testing.assert_array_equal(np.asarray(p["tokens"][0]),
+                                  [3, 20, 30, 40, 50, 0, 0])
+    np.testing.assert_array_equal(np.asarray(p["alive_mask"]),
+                                  [[True, True, False, False]] +
+                                  [[False] * 4])
+    # padded ages clamp to the last real age (empty future -> history end)
+    assert float(p["ages"][0, -1]) == 22.0
+    assert float(p["ages"][1, -1]) == 20.0
+    np.testing.assert_array_equal(np.asarray(p["n_generated"]), [2, 0])
